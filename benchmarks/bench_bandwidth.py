@@ -1,0 +1,37 @@
+"""Paper Fig 5: execution time vs bandwidth limit, normalized to the
+1 B/cycle run of each series, plus plateau-bandwidth summary per series.
+"""
+from repro.core.sweep import bandwidth_sweep, plateau_bandwidth
+
+
+def rows():
+    res = bandwidth_sweep()
+    norm = res.normalized(anchor=1)
+    for kernel, per_vl in norm.items():
+        for vl, curve in per_vl.items():
+            series = "scalar" if vl == 1 else f"vl{vl}"
+            for knob, rel in sorted(curve.items()):
+                yield {
+                    "table": "fig5_bandwidth",
+                    "kernel": kernel,
+                    "series": series,
+                    "knob": knob,
+                    "normalized_time": rel,
+                }
+            yield {
+                "table": "fig5_plateau",
+                "kernel": kernel,
+                "series": series,
+                "knob": plateau_bandwidth(res.data[kernel][vl]),
+                "normalized_time": 0.0,
+            }
+
+
+def main():
+    for r in rows():
+        print(f"{r['table']},{r['kernel']},{r['series']},{r['knob']},"
+              f"{r['normalized_time']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Kernel wall-time microbenchmarks (CPU interpret mode vs jnp oracle).
+
+Wall time in interpret mode is NOT a TPU performance statement (the roofline
+section covers that); this table proves the kernels run and tracks the
+oracle's cost as a sanity ratio.  CSV: name, us_per_call, derived.
+"""
+import time
+
+import numpy as np
+
+import jax
+
+from repro.graphs import gen as G
+from repro.kernels import ops, ref
+from repro.sparse import formats as F
+
+import jax.numpy as jnp
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    m = F.random_csr(2000, 2000, 10.0, seed=0)
+    ell = F.csr_to_ellpack(m, c=128)
+    x = np.random.default_rng(0).standard_normal(2000)
+    cols, vals, xj = jnp.asarray(ell.cols), jnp.asarray(ell.vals), jnp.asarray(x)
+    t_kernel = _time(lambda: ops.spmv(ell, x, vl=128))
+    t_ref = _time(lambda: ref.spmv_ref(cols, vals, xj, m.n_rows))
+    yield ("spmv_vl128_interpret", t_kernel, f"oracle_us={t_ref:.0f}")
+
+    sig = np.random.default_rng(1).standard_normal((8, 2048))
+    t_kernel = _time(lambda: ops.fft(sig))
+    wre, wim = ref.fft_twiddles(2048)
+    sr, si = jnp.asarray(sig), jnp.zeros_like(jnp.asarray(sig))
+    t_ref = _time(lambda: ref.fft_stockham_ref(sr, si, wre, wim))
+    yield ("fft2048_b8_interpret", t_kernel, f"oracle_us={t_ref:.0f}")
+
+    g = G.random_graph(n_nodes=2048, avg_degree=8, seed=2)
+    t_kernel = _time(lambda: ops.bfs(g, 0, vl=256), reps=1)
+    yield ("bfs_2k_nodes_full_run", t_kernel, f"edges={g.n_edges}")
+
+    t_kernel = _time(lambda: ops.pagerank(g, iters=5, vl=256), reps=1)
+    yield ("pagerank_2k_5iter", t_kernel, f"edges={g.n_edges}")
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig 3: execution time vs added memory latency, per kernel/series.
+
+CSV columns: kernel, series, extra_latency_cycles, cycles, us_at_50MHz.
+"""
+from repro.core.sweep import latency_sweep
+
+
+def rows():
+    res = latency_sweep()
+    for kernel, series, knob, cycles in res.rows():
+        yield {
+            "table": "fig3_latency",
+            "kernel": kernel,
+            "series": series,
+            "knob": knob,
+            "cycles": cycles,
+            "us_at_50MHz": cycles / 50.0,
+        }
+
+
+def main():
+    for r in rows():
+        print(f"{r['table']},{r['kernel']},{r['series']},{r['knob']},"
+              f"{r['cycles']:.0f},{r['us_at_50MHz']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

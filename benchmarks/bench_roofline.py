@@ -1,0 +1,176 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) cell
+from the single-pod dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_wire_bytes_per_device / link_bw
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  The dry-run's cost_analysis is per-device (post-SPMD module), so no
+further division by chip count is needed.  MODEL_FLOPS uses 6*N*D for train,
+2*N*D for prefill/decode, with N = active params for MoE.
+"""
+import glob
+import json
+import os
+
+from repro import configs
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../results/dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = configs.get_config(arch)
+    sh = configs.SHAPES[shape_name]
+    n = cfg.active_params_per_token() if cfg.moe else cfg.n_params()
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * sh.global_batch          # decode: one token per row
+
+
+def analyze(record: dict) -> dict:
+    arch, shape = record["arch"], record["shape"]
+    chips = 1
+    for v in record["mesh_shape"].values():
+        chips *= v
+    flops_dev = record.get("flops", 0.0)
+    bytes_dev = record.get("bytes_accessed", 0.0)
+    coll = record.get("collectives_extrapolated", record.get("collectives", {}))
+    wire_dev = coll.get("wire_bytes", 0.0)
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = wire_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(arch, shape)
+    hlo_total = flops_dev * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    # minimum achievable step time: must execute the model FLOPs AND must
+    # touch every argument/output byte (params, optimizer state, caches) at
+    # least once.  bytes_accessed counts ALL HLO operand traffic (upper bound
+    # on HBM), so fraction = t_min / modeled bound is conservative.
+    min_bytes = record.get("argument_size_in_bytes", 0) + record.get(
+        "output_size_in_bytes", 0
+    )
+    t_min = max(mf / chips / PEAK_FLOPS, min_bytes / HBM_BW)
+    frac = t_min / bound if bound else 0.0
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": record["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": useful,
+        "t_min_s": t_min,
+        "roofline_fraction": frac,
+        "peak_bytes_per_device": record.get("peak_bytes_per_device", 0),
+        "compile_s": record.get("compile_s", 0.0),
+    }
+
+
+def suggestion(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute" and row["useful_ratio"] < 0.6:
+        return ("cut redundant HLO compute (remat recompute, TP-replicated "
+                "attention on non-divisible heads, CE in f32)")
+    if d == "compute":
+        return "compute-bound and mostly useful: raise MXU utilization (fusion, bf16 layout)"
+    if d == "memory":
+        return "cut HBM traffic: fuse elementwise chains, cache-resident KV blocks, smaller remat"
+    return "cut collective bytes: vocab-sharded CE, overlap psum with backward, int8 DP grads"
+
+
+def rows(mesh: str = "single", pattern: str = "*"):
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"{pattern}__{mesh}.json"))):
+        with open(path) as f:
+            record = json.load(f)
+        if record.get("status") != "ok":
+            continue
+        yield analyze(record)
+
+
+def _bound(a: dict) -> float:
+    return max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+
+
+def optimized_rows(mesh: str = "single", hbm_gb: float = 16.0):
+    """Best *fitting* variant per cell across all --opt JSONs (accum-scaled),
+    paired with its baseline for the before/after table."""
+    cells: dict[tuple, dict] = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}*.json"))):
+        with open(path) as f:
+            record = json.load(f)
+        if record.get("status") != "ok":
+            continue
+        acc = int(record.get("opts", {}).get("accum", 1))
+        if acc > 1:
+            record["flops"] *= acc
+            record["bytes_accessed"] *= acc
+            ce = record.get("collectives_extrapolated")
+            if ce:
+                ce["wire_bytes"] *= acc
+        a = analyze(record)
+        a["opts"] = record.get("opts", {})
+        a["fits"] = record.get("peak_bytes_per_device", 0) <= hbm_gb * 1e9
+        key = (a["arch"], a["shape"])
+        entry = cells.setdefault(key, {"base": None, "best": None})
+        if not a["opts"]:
+            entry["base"] = a
+        # choose the best fitting variant (fall back to best overall)
+        cur = entry["best"]
+        better = cur is None or (
+            (a["fits"], -_bound(a)) > (cur["fits"], -_bound(cur))
+        )
+        if a["opts"] and better:
+            entry["best"] = a
+    for (arch, shape), entry in sorted(cells.items()):
+        if entry["base"] is None:
+            continue
+        yield arch, shape, entry["base"], entry["best"] or entry["base"]
+
+
+def main():
+    print("arch,shape,t_compute_s,t_memory_s,t_collective_s,dominant,"
+          "model_flops,hlo_flops_total,useful_ratio,roofline_fraction,"
+          "peak_GB_per_device")
+    for r in rows():
+        print(
+            f"{r['arch']},{r['shape']},{r['t_compute_s']:.4f},"
+            f"{r['t_memory_s']:.4f},{r['t_collective_s']:.4f},{r['dominant']},"
+            f"{r['model_flops']:.3e},{r['hlo_flops_total']:.3e},"
+            f"{r['useful_ratio']:.3f},{min(r['roofline_fraction'], 1.0):.3f},"
+            f"{r['peak_bytes_per_device']/1e9:.1f}"
+        )
+    opt = list(optimized_rows())
+    if any(best is not base for _, _, base, best in opt):
+        print("\n# table: roofline optimized-vs-baseline "
+              "(arch,shape,opts,bound_before_s,bound_after_s,speedup,"
+              "frac_before,frac_after,fits_after)")
+        for arch, shape, base, best in opt:
+            if best is base:
+                continue
+            o = "+".join(f"{k}={v}" for k, v in sorted(best["opts"].items()))
+            b0, b1 = _bound(base), _bound(best)
+            print(
+                f"{arch},{shape},{o},{b0:.4f},{b1:.4f},{b0/max(b1,1e-12):.2f},"
+                f"{min(base['roofline_fraction'],1):.3f},"
+                f"{min(best['roofline_fraction'],1):.3f},{best['fits']}"
+            )
+
+
+if __name__ == "__main__":
+    main()

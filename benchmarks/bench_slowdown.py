@@ -1,0 +1,48 @@
+"""Paper Fig 4: slowdown tables (normalized to the +0-latency run), plus the
+quantitative anchor comparison against the paper's quoted SpMV cells.
+"""
+from repro.core.sweep import (
+    PAPER_SPMV_ANCHORS,
+    latency_sweep,
+    slowdown_tables,
+    spmv_anchor_errors,
+)
+
+
+def rows():
+    tables = slowdown_tables(latency_sweep())
+    for kernel, per_vl in tables.items():
+        for vl, curve in per_vl.items():
+            series = "scalar" if vl == 1 else f"vl{vl}"
+            for knob, slowdown in sorted(curve.items()):
+                yield {
+                    "table": "fig4_slowdown",
+                    "kernel": kernel,
+                    "series": series,
+                    "knob": knob,
+                    "slowdown": slowdown,
+                }
+    errors = spmv_anchor_errors(tables)
+    for (vl, lat), target in PAPER_SPMV_ANCHORS.items():
+        series = "scalar" if vl == 1 else f"vl{vl}"
+        got = tables["spmv"][vl][lat]
+        yield {
+            "table": "fig4_anchor",
+            "kernel": "spmv",
+            "series": series,
+            "knob": lat,
+            "slowdown": got,
+            "paper": target,
+            "rel_err": errors[(vl, lat)],
+        }
+
+
+def main():
+    for r in rows():
+        extra = f",{r['paper']},{r['rel_err']:.3f}" if "paper" in r else ",,"
+        print(f"{r['table']},{r['kernel']},{r['series']},{r['knob']},"
+              f"{r['slowdown']:.3f}{extra}")
+
+
+if __name__ == "__main__":
+    main()

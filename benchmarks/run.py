@@ -1,0 +1,45 @@
+"""Benchmark entry point: one table per paper figure + the roofline table.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints CSV:
+  name,us_per_call,derived   (kernel microbenches)
+plus the fig3/fig4/fig5 sweep tables and, when dry-run artifacts exist under
+results/dryrun/, the roofline summary.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main() -> None:
+    from benchmarks import bench_bandwidth, bench_kernels, bench_latency, bench_slowdown
+
+    print("# table: kernel microbenchmarks (name,us_per_call,derived)")
+    bench_kernels.main()
+
+    print("\n# table: paper Fig 3 (kernel,series,extra_latency,cycles,us)")
+    bench_latency.main()
+
+    print("\n# table: paper Fig 4 (kernel,series,extra_latency,slowdown[,paper,rel_err])")
+    bench_slowdown.main()
+
+    print("\n# table: paper Fig 5 (kernel,series,bw_limit,normalized_time)")
+    bench_bandwidth.main()
+
+    results = os.path.join(os.path.dirname(__file__), "../results/dryrun")
+    if os.path.isdir(results) and any(f.endswith(".json") for f in os.listdir(results)):
+        from benchmarks import bench_roofline
+
+        print("\n# table: roofline (single-pod dry-run derived)")
+        bench_roofline.main()
+    else:
+        print("\n# roofline: no dry-run artifacts under results/dryrun "
+              "(run python -m repro.launch.dryrun --all first)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Checkpointing: atomic npz + manifest, async writer, elastic resharding."""
+from repro.checkpoint.store import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,37 @@
+"""Core of the reproduction: the paper's contribution as a composable feature.
+
+- :mod:`repro.core.vconfig`  — the variable vector-length knob (§2.1)
+- :mod:`repro.core.sdv`      — Latency Controller + Bandwidth Limiter machine
+  model (§2.2/§2.3) executing kernel transaction traces
+- :mod:`repro.core.traffic`  — transaction traces of the four paper kernels
+- :mod:`repro.core.sweep`    — the §4 evaluation harness (Figs 3/4/5) and
+  machine-checkable claims
+- :mod:`repro.core.autotune` — the co-design loop: SDV-modeled block-shape
+  selection for the TPU kernels
+"""
+from repro.core.vconfig import PAPER_VLS, SCALAR_VL, VectorConfig, sweep_configs
+from repro.core.sdv import (
+    MachineParams,
+    MemOp,
+    Phase,
+    RunResult,
+    SDVMachine,
+    Trace,
+    fpga_sdv_machine,
+    tpu_v5e_machine,
+)
+
+__all__ = [
+    "PAPER_VLS",
+    "SCALAR_VL",
+    "VectorConfig",
+    "sweep_configs",
+    "MachineParams",
+    "MemOp",
+    "Phase",
+    "RunResult",
+    "SDVMachine",
+    "Trace",
+    "fpga_sdv_machine",
+    "tpu_v5e_machine",
+]

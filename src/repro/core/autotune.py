@@ -1,0 +1,113 @@
+"""SDV-driven block-shape selection — the paper's co-design loop as a feature.
+
+The paper's methodology is: expose VL / latency / bandwidth as knobs, measure,
+and feed the result back into hardware-software co-design.  On TPU the
+software-side knob is the Pallas block shape.  This module closes the loop in
+software: given a kernel's traffic builder and the TPU machine constants, it
+picks the block width ("vl") that minimizes SDV-modeled cycles subject to the
+VMEM budget — i.e. it answers "how long should the vectors be on *this*
+memory system" per kernel, which is exactly the question the paper's FPGA
+sweeps answer per kernel on theirs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+from repro.core.sdv import MachineParams, SDVMachine, Trace, tpu_v5e_machine
+from repro.core.vconfig import VectorConfig
+
+#: TPU v5e VMEM budget a single kernel invocation should stay under
+#: (half of VMEM, leaving room for double buffering).
+VMEM_BUDGET_BYTES = 64 * 1024 * 1024
+#: MXU/VPU-friendly lane multiple.
+LANE = 128
+SUBLANE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    vl: int
+    cycles: float
+    table: tuple[tuple[int, float], ...]   # (vl, modeled cycles) per candidate
+
+    def speedup_over_worst(self) -> float:
+        worst = max(c for _, c in self.table)
+        return worst / self.cycles
+
+
+def candidate_vls(
+    max_vl: int = 4096,
+    min_vl: int = SUBLANE,
+    multiple: int = SUBLANE,
+) -> list[int]:
+    """Power-of-two candidates aligned to the TPU sublane multiple."""
+    out = []
+    v = min_vl
+    while v <= max_vl:
+        if v % multiple == 0:
+            out.append(v)
+        v *= 2
+    return out
+
+
+def vmem_footprint(bytes_per_vl_row: float, vl: int) -> float:
+    """Working-set bytes a block of width ``vl`` pins in VMEM."""
+    return bytes_per_vl_row * vl
+
+
+def tune_vl(
+    trace_builder: Callable[[VectorConfig], Trace],
+    machine: MachineParams | None = None,
+    candidates: Sequence[int] | None = None,
+    bytes_per_vl_row: float = 0.0,
+    vmem_budget: float = VMEM_BUDGET_BYTES,
+) -> TuneResult:
+    """Pick the block width minimizing modeled cycles under the VMEM budget.
+
+    ``bytes_per_vl_row`` lets callers express the VMEM constraint: a block of
+    width vl must fit ``bytes_per_vl_row * vl`` bytes of VMEM (0 = no bound).
+    """
+    machine = machine or tpu_v5e_machine()
+    cands = list(candidates) if candidates is not None else candidate_vls()
+    sdv = SDVMachine(machine)
+    rows: list[tuple[int, float]] = []
+    for vl in cands:
+        if bytes_per_vl_row and vmem_footprint(bytes_per_vl_row, vl) > vmem_budget:
+            continue
+        cycles = sdv.run(trace_builder(VectorConfig(vl=vl, lanes=machine.lanes))).cycles
+        rows.append((vl, cycles))
+    if not rows:
+        raise ValueError("no candidate vl fits the VMEM budget")
+    best_vl, best_cycles = min(rows, key=lambda r: r[1])
+    return TuneResult(vl=best_vl, cycles=best_cycles, table=tuple(rows))
+
+
+def align_block(dim: int, multiple: int = LANE) -> int:
+    """Round a block dimension up to a hardware-aligned multiple."""
+    return multiple * math.ceil(dim / multiple)
+
+
+def pick_2d_block(
+    rows: int,
+    cols: int,
+    elem_bytes: int = 4,
+    vmem_budget: float = VMEM_BUDGET_BYTES / 4,
+    row_multiple: int = SUBLANE,
+    col_multiple: int = LANE,
+) -> tuple[int, int]:
+    """Largest (row, col) tile with hardware-aligned dims fitting the budget.
+
+    Greedy: prefer widening columns (lane dimension, burst-friendly = the
+    paper's 'longer vectors first') before adding rows.
+    """
+    c = min(align_block(cols, col_multiple), cols if cols % col_multiple == 0
+            else align_block(cols, col_multiple))
+    c = min(c, 4096)
+    while c > col_multiple and c * row_multiple * elem_bytes > vmem_budget:
+        c //= 2
+    r = row_multiple
+    while r * 2 <= rows and c * r * 2 * elem_bytes <= vmem_budget:
+        r *= 2
+    return max(r, row_multiple), max(c, col_multiple)

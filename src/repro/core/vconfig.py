@@ -1,0 +1,68 @@
+"""Vector-length configuration — the paper's §2.1 'Variable Vector Length' CSR.
+
+The FPGA-SDV exposes the machine's maximum vector length in a custom CSR so
+software can lower it at runtime and study the interaction between VL and the
+memory subsystem.  On TPU there is no runtime VL register; the analogue is the
+*block width* a Pallas kernel processes per grid step (one HBM->VMEM DMA + one
+VPU/MXU pass).  ``VectorConfig`` is that knob, threaded through every kernel in
+:mod:`repro.kernels` and through the SDV machine model in :mod:`repro.core.sdv`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+#: VL values studied by the paper (double-precision elements per instruction).
+PAPER_VLS: tuple[int, ...] = (8, 16, 32, 64, 128, 256)
+
+#: Sentinel VL used to model the scalar ISA (1 element per instruction).
+SCALAR_VL = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorConfig:
+    """Software-visible vector configuration (the paper's VL CSR).
+
+    Attributes:
+      vl: maximum vector length in elements per instruction / per kernel block.
+      lanes: number of parallel execution lanes in the vector unit (Vitruvius
+        has 8; a TPU VPU vreg is 8x128 lanes).  Arithmetic on a VL-element
+        vector costs ceil(vl / lanes) occupancy cycles.
+      elem_bytes: bytes per element (paper uses double precision).
+    """
+
+    vl: int = 256
+    lanes: int = 8
+    elem_bytes: int = 8
+
+    def __post_init__(self) -> None:
+        if self.vl < 1:
+            raise ValueError(f"vl must be >= 1, got {self.vl}")
+        if self.lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {self.lanes}")
+
+    @property
+    def is_scalar(self) -> bool:
+        return self.vl == SCALAR_VL
+
+    @property
+    def register_bits(self) -> int:
+        """Vector register width in bits (the paper quotes 16 kbit at VL=256)."""
+        return self.vl * self.elem_bytes * 8
+
+    def alu_cycles(self, n_ops: int = 1) -> int:
+        """Occupancy cycles for ``n_ops`` vector arithmetic instructions."""
+        return n_ops * max(1, -(-self.vl // self.lanes))
+
+    def n_instructions(self, n_elements: int) -> int:
+        """Vector instructions needed to touch ``n_elements`` (vsetvl tail)."""
+        return -(-n_elements // self.vl)
+
+    def with_vl(self, vl: int) -> "VectorConfig":
+        """Lowered/raised-VL copy — the programmatic CSR write of §2.1."""
+        return dataclasses.replace(self, vl=vl)
+
+
+def sweep_configs(vls: Sequence[int] = PAPER_VLS, **kw) -> list[VectorConfig]:
+    """The paper's VL sweep: one config per studied vector length."""
+    return [VectorConfig(vl=v, **kw) for v in vls]

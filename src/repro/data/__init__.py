@@ -1,0 +1,4 @@
+"""Deterministic, shardable, resumable synthetic data pipeline."""
+from repro.data.pipeline import DataConfig, DataState, SyntheticLM, make_global_batch
+
+__all__ = ["DataConfig", "DataState", "SyntheticLM", "make_global_batch"]

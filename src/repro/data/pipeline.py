@@ -1,0 +1,76 @@
+"""Synthetic LM data pipeline: deterministic, shardable, exactly resumable.
+
+Every batch is a pure function of (seed, step, shard) — a counter-based PRNG
+(threefry via jax.random, or numpy Philox on host) — so:
+
+* restart at step k reproduces the identical stream (fault tolerance),
+* each data-parallel rank generates only its shard (no host broadcast),
+* no filesystem state: the checkpoint stores just ``DataState(step)``.
+
+The token distribution is Zipfian with Markov structure (repeated n-grams),
+so cross-entropy actually *decreases* during the example training runs —
+uniform random tokens would pin the loss at log(V).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2          # skew of the unigram distribution
+    markov_period: int = 16      # repeat structure the model can learn
+    ignore_id: int = -1
+
+
+@dataclasses.dataclass
+class DataState:
+    step: int = 0
+
+    def as_dict(self):
+        return {"step": self.step}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(step=int(d["step"]))
+
+
+class SyntheticLM:
+    """Host-side generator; one instance per process."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        # smooth zipf over the vocab, precomputed once
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks**cfg.zipf_a
+        self._p = p / p.sum()
+
+    def batch_for(self, step: int, shard: int = 0, n_shards: int = 1):
+        """(tokens, labels) for this rank's slice of the global batch."""
+        cfg = self.cfg
+        assert cfg.global_batch % n_shards == 0
+        local = cfg.global_batch // n_shards
+        rng = np.random.Generator(
+            np.random.Philox(key=cfg.seed, counter=[0, 0, step, shard])
+        )
+        base = rng.choice(cfg.vocab_size, size=(local, cfg.seq_len), p=self._p)
+        # inject learnable periodic structure: every markov_period-th token
+        # repeats the sequence-initial token
+        period = cfg.markov_period
+        base[:, period::period] = base[:, :1]
+        tokens = base.astype(np.int32)
+        labels = np.roll(tokens, -1, axis=1)
+        labels[:, -1] = cfg.ignore_id
+        return tokens, labels
+
+
+def make_global_batch(cfg: DataConfig, step: int):
+    """Convenience: the full (unsharded) batch, for single-host tests."""
+    gen = SyntheticLM(cfg)
+    return gen.batch_for(step, 0, 1)

@@ -1,0 +1,16 @@
+"""Graph substrate: generators and host references for BFS / PageRank."""
+from repro.graphs.gen import (
+    EllpackGraph,
+    bfs_reference,
+    pagerank_reference,
+    random_graph,
+    rmat_graph,
+)
+
+__all__ = [
+    "EllpackGraph",
+    "bfs_reference",
+    "pagerank_reference",
+    "random_graph",
+    "rmat_graph",
+]

@@ -1,0 +1,149 @@
+"""Graph generation + host references for the paper's BFS / PageRank (§3.1).
+
+The paper evaluates both on a 2^15-node graph.  Long-vector graph kernels
+(Vizcaino's thesis [13]) use padded adjacency so one vector instruction scans
+VL neighbors: we store ELLPACK adjacency (degree-padded, PAD = -1), the same
+layout class the SpMV kernel uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PAD = -1
+INF = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class EllpackGraph:
+    """Degree-padded adjacency: ``adj[v, k]`` = k-th out-neighbor of v or PAD."""
+
+    adj: np.ndarray          # (n, width) int32
+    n_nodes: int
+
+    @property
+    def width(self) -> int:
+        return self.adj.shape[1]
+
+    @property
+    def n_edges(self) -> int:
+        return int((self.adj != PAD).sum())
+
+    @property
+    def out_degree(self) -> np.ndarray:
+        return (self.adj != PAD).sum(axis=1)
+
+    def transpose(self) -> "EllpackGraph":
+        """Reverse graph (in-neighbors), used by pull-style PageRank."""
+        src, k = np.nonzero(self.adj != PAD)
+        dst = self.adj[src, k]
+        order = np.argsort(dst, kind="stable")
+        src, dst = src[order], dst[order]
+        counts = np.bincount(dst, minlength=self.n_nodes)
+        width = max(1, int(counts.max()))
+        radj = np.full((self.n_nodes, width), PAD, np.int32)
+        offsets = np.zeros(self.n_nodes, np.int64)
+        starts = np.zeros(self.n_nodes + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        for i in range(len(src)):
+            d = dst[i]
+            radj[d, offsets[d]] = src[i]
+            offsets[d] += 1
+        return EllpackGraph(adj=radj, n_nodes=self.n_nodes)
+
+
+def random_graph(
+    n_nodes: int = 1 << 15,
+    avg_degree: int = 16,
+    seed: int = 0,
+    connected_ring: bool = True,
+) -> EllpackGraph:
+    """Uniform random digraph, optional ring to guarantee reachability."""
+    rng = np.random.default_rng(seed)
+    deg = np.clip(rng.poisson(avg_degree - 1, n_nodes) + 1, 1, 4 * avg_degree)
+    width = int(deg.max()) + (1 if connected_ring else 0)
+    adj = np.full((n_nodes, width), PAD, np.int32)
+    for v in range(n_nodes):
+        k = int(deg[v])
+        nbrs = rng.choice(n_nodes, size=k, replace=False)
+        adj[v, :k] = nbrs
+        if connected_ring:
+            adj[v, k] = (v + 1) % n_nodes
+    return EllpackGraph(adj=adj, n_nodes=n_nodes)
+
+
+def rmat_graph(
+    n_nodes: int = 1 << 15,
+    avg_degree: int = 16,
+    seed: int = 0,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    degree_cap_factor: int = 8,
+) -> EllpackGraph:
+    """R-MAT (Graph500-style skewed) generator, degree-capped for ELLPACK."""
+    rng = np.random.default_rng(seed)
+    scale = int(np.log2(n_nodes))
+    n_edges = n_nodes * avg_degree
+    src = np.zeros(n_edges, np.int64)
+    dst = np.zeros(n_edges, np.int64)
+    for bit in range(scale):
+        r = rng.random(n_edges)
+        s_bit = r >= a + b                     # lower half for source
+        r2 = rng.random(n_edges)
+        d_bit = np.where(s_bit, r2 >= c / max(c + (1 - a - b - c), 1e-9),
+                         r2 >= a / max(a + b, 1e-9))
+        src |= s_bit.astype(np.int64) << bit
+        dst |= d_bit.astype(np.int64) << bit
+    cap = degree_cap_factor * avg_degree
+    adj_lists: list[list[int]] = [[] for _ in range(n_nodes)]
+    for s, d in zip(src, dst):
+        if len(adj_lists[s]) < cap and s != d:
+            adj_lists[s].append(int(d))
+    width = max(1, max(len(l) for l in adj_lists))
+    adj = np.full((n_nodes, width), PAD, np.int32)
+    for v, l in enumerate(adj_lists):
+        adj[v, : len(l)] = l
+    return EllpackGraph(adj=adj, n_nodes=n_nodes)
+
+
+# ---------------------------------------------------------------------------
+# Host references
+# ---------------------------------------------------------------------------
+
+
+def bfs_reference(g: EllpackGraph, source: int = 0) -> np.ndarray:
+    """Level-synchronous BFS distances (int32, INF = unreachable)."""
+    dist = np.full(g.n_nodes, INF, np.int32)
+    dist[source] = 0
+    frontier = np.array([source], np.int64)
+    level = 0
+    while len(frontier):
+        level += 1
+        nbrs = g.adj[frontier].reshape(-1)
+        nbrs = nbrs[nbrs != PAD]
+        nbrs = np.unique(nbrs)
+        new = nbrs[dist[nbrs] == INF]
+        dist[new] = level
+        frontier = new
+    return dist
+
+
+def pagerank_reference(
+    g: EllpackGraph,
+    damping: float = 0.85,
+    iters: int = 20,
+    dtype=np.float64,
+) -> np.ndarray:
+    """Pull-style power iteration with dangling-mass redistribution."""
+    n = g.n_nodes
+    out_deg = g.out_degree.astype(dtype)
+    rt = g.transpose()
+    rank = np.full(n, 1.0 / n, dtype)
+    for _ in range(iters):
+        contrib = np.where(out_deg > 0, rank / np.maximum(out_deg, 1), 0.0)
+        dangling = rank[out_deg == 0].sum()
+        gathered = np.where(rt.adj == PAD, 0.0, contrib[np.clip(rt.adj, 0, n - 1)])
+        rank = (1.0 - damping) / n + damping * (gathered.sum(axis=1) + dangling / n)
+    return rank

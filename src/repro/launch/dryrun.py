@@ -1,0 +1,399 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the production
+mesh is built from 512 placeholder host devices, every cell's step function
+is jit-lowered with full sharding trees, compiled, and its
+``memory_analysis()`` / ``cost_analysis()`` / collective schedule recorded
+to ``results/dryrun/*.json`` — the inputs to the §Roofline analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+  python -m repro.launch.dryrun --arch ... --opt remat=full,zero1=0   # perf variants
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import blocks as blk
+from repro.models import model as M
+from repro.optim import AdamWConfig
+from repro.train.step import TrainConfig, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+# ---------------------------------------------------------------------------
+# Collective-traffic accounting from the post-SPMD HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<dtype>\w+)\[(?P<shape>[\d,]*)\])\S*\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_TUPLE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _nbytes(dtype: str, shape: str) -> int:
+    n = 1
+    for d in shape.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 1
+
+
+def collective_stats(hlo_text: str) -> dict[str, Any]:
+    """Per-collective-kind byte counts from the partitioned HLO.
+
+    ``result_bytes``: sum of result-shape bytes per op kind (per device).
+    ``wire_bytes``: ring-algorithm bytes actually crossing links per device:
+      all-reduce 2(n-1)/n * operand; all-gather/reduce-scatter (n-1)/n * big
+      side; all-to-all (n-1)/n; collective-permute 1x.
+    """
+    kinds: dict[str, dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if m.group("dtype"):
+            rb = _nbytes(m.group("dtype"), m.group("shape"))
+        else:  # tuple result: sum the parts
+            head = line.split("=", 2)[1]
+            rb = sum(_nbytes(d, s) for d, s in _TUPLE_RE.findall(head.split(op)[0]))
+        n = max(_group_size(line), 1)
+        if op == "all-reduce":
+            wire = 2 * (n - 1) / n * rb
+        elif op == "all-gather":
+            wire = (n - 1) / n * rb                   # result is the big side
+        elif op == "reduce-scatter":
+            wire = (n - 1) * rb                       # operand = result * n
+        elif op == "all-to-all":
+            wire = (n - 1) / n * rb
+        else:  # collective-permute
+            wire = rb
+        k = kinds.setdefault(op, {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0})
+        k["count"] += 1
+        k["result_bytes"] += rb
+        k["wire_bytes"] += wire
+    total_wire = sum(k["wire_bytes"] for k in kinds.values())
+    total_result = sum(k["result_bytes"] for k in kinds.values())
+    return {"kinds": kinds, "wire_bytes": total_wire, "result_bytes": total_result}
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def parse_opts(opt: str | None) -> dict[str, str]:
+    if not opt:
+        return {}
+    return dict(kv.split("=", 1) for kv in opt.split(",") if kv)
+
+
+def _round_up(v: int, m: int) -> int:
+    return m * ((v + m - 1) // m)
+
+
+def apply_opt_flags(cfg, mesh, opts: dict[str, str]):
+    """Perf-variant toggles shared by the hillclimb runs (§Perf)."""
+    import dataclasses
+
+    from repro.launch import specs as S_
+    from repro.models import attention as attn_mod
+
+    attn_mod.SEQ_SHARD_FALLBACK = opts.get("seqshard", "0") == "1"
+    attn_mod.ATTN_BF16_SCORES = opts.get("attnbf16", "0") == "1"
+    attn_mod.ATTN_KV_CHUNK = int(opts.get("attnchunk", "0"))
+    S_.KV_SEQ_SHARD = opts.get("kvseq", "0") == "1"
+    S_.FSDP_PARAMS = opts.get("fsdp", "0") == "1"
+    from repro.models import ssm as ssm_mod
+
+    ssm_mod.SSD_BF16 = opts.get("ssdbf16", "0") == "1"
+    if opts.get("padvocab", "0") == "1":
+        tp = mesh.shape.get("model", 1)
+        cfg = dataclasses.replace(cfg, vocab_size=_round_up(cfg.vocab_size, tp))
+    if "chunk" in opts and cfg.ssm is not None:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, chunk=int(opts["chunk"]))
+        )
+    return cfg
+
+
+def build_cell(cfg, shape_name: str, mesh, opts: dict[str, str]):
+    """Returns (fn, example_args, in_shardings) ready for jit().lower()."""
+    cfg = apply_opt_flags(cfg, mesh, opts)
+    sh = configs.SHAPES[shape_name]
+    dtype = jnp.bfloat16
+    remat = opts.get("remat", "dots")
+    remat = None if remat in ("none", "") else remat
+    zero1 = opts.get("zero1", "1") != "0"
+    batch_sds = S.input_specs_for(cfg, shape_name)
+
+    if sh.kind == "train":
+        tcfg = TrainConfig(
+            optimizer=AdamWConfig(),
+            remat=remat,
+            accum_steps=int(opts.get("accum", "1")),
+            dtype=dtype,
+            compress_grads=opts.get("compress", "0") == "1",
+            param_dtype=jnp.bfloat16 if opts.get("bf16params", "0") == "1" else None,
+        )
+        state_sds = S.abstract_train_state(cfg, tcfg)
+        st_shard = S.state_shardings(mesh, cfg, state_sds, zero1=zero1)
+        b_shard = S.batch_shardings(mesh, batch_sds, sh.global_batch)
+        fn = make_train_step(cfg, tcfg)
+        return fn, (state_sds, batch_sds), (st_shard, b_shard)
+
+    params_sds = S.abstract_params(cfg)
+    p_shard = S.param_shardings(mesh, cfg, params_sds)
+    if sh.kind == "prefill":
+        caches_sds = S.abstract_caches(cfg, sh.global_batch, sh.seq_len, dtype)
+        c_shard = S.cache_shardings(mesh, cfg, caches_sds, sh.global_batch)
+        b_shard = S.batch_shardings(mesh, batch_sds, sh.global_batch)
+
+        def prefill_fn(params, batch, caches):
+            return M.prefill(params, cfg, batch, caches, dtype=dtype)
+
+        return prefill_fn, (params_sds, batch_sds, caches_sds), (p_shard, b_shard, c_shard)
+
+    # decode: one token against a seq_len-deep cache
+    caches_sds = S.abstract_caches(cfg, sh.global_batch, sh.seq_len, dtype)
+    c_shard = S.cache_shardings(mesh, cfg, caches_sds, sh.global_batch)
+    b_shard = S.batch_shardings(mesh, batch_sds, sh.global_batch)
+
+    def decode_fn(params, batch, caches):
+        return M.decode_step(params, cfg, batch["tokens"], caches, dtype=dtype)
+
+    return decode_fn, (params_sds, batch_sds, caches_sds), (p_shard, b_shard, c_shard)
+
+
+def _compile_once(cfg, shape_name, mesh, opts, unroll: bool) -> dict:
+    """One lower+compile; returns raw metrics (per-device)."""
+    blk.SCAN_UNROLL = max(cfg.n_layers, getattr(cfg.encdec, "encoder_layers", 0) or 0) if unroll else 1
+    out: dict[str, Any] = {}
+    t0 = time.time()
+    fn, args, shardings = build_cell(cfg, shape_name, mesh, opts)
+    jitted = jax.jit(fn, in_shardings=shardings)
+    lowered = jitted.lower(*args)
+    out["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    out["compile_s"] = round(time.time() - t1, 2)
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                out[k] = int(v)
+        out["peak_bytes_per_device"] = int(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+        )
+    cost = compiled.cost_analysis() or {}
+    out["flops"] = float(cost.get("flops", 0.0))
+    out["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    out["collectives"] = collective_stats(hlo)
+    out["hlo_lines"] = hlo.count("\n")
+    blk.SCAN_UNROLL = 1
+    return out
+
+
+def _scaled_cfg(cfg, n_layers: int):
+    import dataclasses
+
+    kw: dict[str, Any] = {"n_layers": n_layers}
+    if cfg.encdec is not None:
+        kw["encdec"] = dataclasses.replace(cfg.encdec, encoder_layers=n_layers)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _layer_points(cfg) -> tuple[int, int]:
+    """Two small layer counts whose cost extrapolates linearly to full depth.
+
+    The constant part (embed/logits/dense0) is shared; everything else is
+    affine in the layer count, so f(L) = f(a) + (L-a) * (f(b)-f(a)) / (b-a).
+    """
+    if cfg.cross_attn is not None and cfg.cross_attn.every:
+        e = cfg.cross_attn.every
+        return e, 2 * e
+    if cfg.dense_first_layer_ff:
+        return 2, 3
+    return 1, 2
+
+
+def _make_mesh(mesh_kind: str, opts: dict[str, str]):
+    """Production mesh, or a custom geometry via --opt mesh=32x8 (same chip
+    count, different (data, model) split — per-arch co-design, see §Perf)."""
+    if "mesh" in opts:
+        dims = tuple(int(x) for x in opts["mesh"].split("x"))
+        names = ("pod", "data", "model")[-len(dims):]
+        from repro.launch.mesh import make_mesh_from_plan
+
+        return make_mesh_from_plan(dims, names)
+    return make_production_mesh(multi_pod=(mesh_kind == "multi"))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, opts: dict[str, str]) -> dict:
+    ok, reason = configs.cell_supported(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    mesh = _make_mesh(mesh_kind, opts)
+    cfg = configs.get_config(arch)
+    record: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "opts": opts,
+        "n_layers": cfg.n_layers,
+    }
+    with jax.set_mesh(mesh):
+        # 1) full-depth ROLLED compile: proves it lowers/compiles/fits —
+        #    memory analysis, compile timing, HLO size.
+        full = _compile_once(cfg, shape_name, mesh, opts, unroll=False)
+        record.update(full)
+        # 2) exact per-device cost: XLA's cost_analysis counts a while body
+        #    once, so compile two small FULLY-UNROLLED depths and extrapolate
+        #    the affine-in-L cost to the real depth (single-pod roofline
+        #    cells only; multi-pod needs just the compile proof).
+        if mesh_kind == "single" and opts.get("extrapolate", "1") == "1":
+            a, b = _layer_points(cfg)
+            fa = _compile_once(_scaled_cfg(cfg, a), shape_name, mesh, opts, unroll=True)
+            fb = _compile_once(_scaled_cfg(cfg, b), shape_name, mesh, opts, unroll=True)
+            L = cfg.n_layers
+
+            def ext(ka, kb):
+                return ka + (L - a) * (kb - ka) / (b - a)
+
+            record["flops"] = ext(fa["flops"], fb["flops"])
+            record["bytes_accessed"] = ext(fa["bytes_accessed"], fb["bytes_accessed"])
+            wire = ext(fa["collectives"]["wire_bytes"], fb["collectives"]["wire_bytes"])
+            result = ext(fa["collectives"]["result_bytes"], fb["collectives"]["result_bytes"])
+            record["collectives_extrapolated"] = {
+                "wire_bytes": wire, "result_bytes": result,
+                "points": {str(a): fa["collectives"], str(b): fb["collectives"]},
+            }
+            record["cost_points"] = {
+                str(a): {"flops": fa["flops"], "bytes": fa["bytes_accessed"]},
+                str(b): {"flops": fb["flops"], "bytes": fb["bytes_accessed"]},
+            }
+    record["status"] = "ok"
+    return record
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def result_path(arch, shape, mesh_kind, opts) -> str:
+    suffix = ""
+    if opts:
+        suffix = "__" + "_".join(f"{k}-{v}" for k, v in sorted(opts.items()))
+    safe_arch = arch.replace(".", "_")
+    return os.path.join(
+        os.path.abspath(RESULTS_DIR), f"{safe_arch}__{shape}__{mesh_kind}{suffix}.json"
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCHS)
+    ap.add_argument("--shape", choices=list(configs.SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", default="", help="k=v,... perf variant options")
+    args = ap.parse_args()
+    opts = parse_opts(args.opt)
+    os.makedirs(os.path.abspath(RESULTS_DIR), exist_ok=True)
+
+    if args.all:
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        failures = []
+        for arch, shape in configs.all_cells():
+            for mesh_kind in meshes:
+                out = result_path(arch, shape, mesh_kind, opts)
+                if os.path.exists(out) and not args.force:
+                    print(f"[cached] {arch} {shape} {mesh_kind}")
+                    continue
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                ]
+                if args.opt:
+                    cmd += ["--opt", args.opt]
+                if args.force:
+                    cmd += ["--force"]
+                print(f"[run] {arch} {shape} {mesh_kind}", flush=True)
+                rc = subprocess.run(cmd).returncode
+                if rc != 0:
+                    failures.append((arch, shape, mesh_kind))
+        if failures:
+            print("FAILED cells:", failures)
+            return 1
+        print("all cells ok")
+        return 0
+
+    assert args.arch and args.shape, "--arch/--shape required without --all"
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for mesh_kind in meshes:
+        out = result_path(args.arch, args.shape, mesh_kind, opts)
+        if os.path.exists(out) and not args.force:
+            print(f"[cached] {out}")
+            continue
+        record = run_cell(args.arch, args.shape, mesh_kind, opts)
+        with open(out, "w") as f:
+            json.dump(record, f, indent=1)
+        status = record["status"]
+        coll = record.get("collectives_extrapolated",
+                          record.get("collectives", {}))
+        print(
+            f"[{status}] {args.arch} {args.shape} {mesh_kind} "
+            f"flops={record.get('flops', 0):.3e} "
+            f"collective_wire={coll.get('wire_bytes', 0):.3e}B "
+            f"compile={record.get('compile_s', 0)}s -> {out}"
+        )
+        if status == "ok":
+            print("memory_analysis:", {
+                k: record.get(k) for k in
+                ("argument_size_in_bytes", "temp_size_in_bytes", "output_size_in_bytes")
+            })
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

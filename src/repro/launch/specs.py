@@ -1,0 +1,205 @@
+"""Input specs + sharding trees for every (arch x shape) dry-run cell.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation), and the
+matching functions build the NamedSharding trees for params / optimizer /
+caches / batch on a given mesh.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import model as M
+from repro.models import sharding as shrd
+from repro.models.config import ModelConfig
+from repro.train.step import TrainConfig, init_train_state
+
+SDS = jax.ShapeDtypeStruct
+
+#: Shard the KV-cache *sequence* axis over the model axis (flash-decode
+#: style).  Wins when kv-head count cannot shard (e.g. minicpm's 36 MHA
+#: heads on TP=16): each rank then scans 1/TP of the context and the softmax
+#: reduces across ranks.  Off by default (baseline); §Perf toggles it.
+KV_SEQ_SHARD: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+
+def _ctx_sds(cfg: ModelConfig, batch: int) -> SDS | None:
+    if cfg.cross_attn is not None and cfg.cross_attn.every:
+        d_ctx = cfg.cross_attn.d_ctx or cfg.d_model
+        return SDS((batch, cfg.cross_attn.n_ctx_tokens, d_ctx), jnp.bfloat16)
+    if cfg.encdec is not None:
+        return SDS((batch, cfg.encdec.n_ctx_tokens, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def input_specs(arch: str, shape_name: str) -> dict[str, Any]:
+    """ShapeDtypeStruct batch for one cell (tokens/labels/ctx_embeds)."""
+    return input_specs_for(configs.get_config(arch), shape_name)
+
+
+def input_specs_for(cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
+    sh = configs.SHAPES[shape_name]
+    b = sh.global_batch
+    if sh.kind == "train":
+        batch = {
+            "tokens": SDS((b, sh.seq_len), jnp.int32),
+            "labels": SDS((b, sh.seq_len), jnp.int32),
+        }
+    elif sh.kind == "prefill":
+        batch = {"tokens": SDS((b, sh.seq_len), jnp.int32)}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": SDS((b, 1), jnp.int32)}
+    ctx = _ctx_sds(cfg, b)
+    if ctx is not None and sh.kind != "decode":
+        batch["ctx_embeds"] = ctx
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+
+def _dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_shardings(mesh, batch_sds: dict, batch_size: int):
+    """Batch dim over (pod, data) when divisible, else replicated."""
+    dp = _dp_axes(mesh)
+    dp = dp if batch_size % max(_dp_size(mesh), 1) == 0 else ()
+    def spec(sds):
+        parts = [dp if dp else None] + [None] * (len(sds.shape) - 1)
+        return NamedSharding(mesh, P(*parts))
+    return {k: spec(v) for k, v in batch_sds.items()}
+
+
+#: FSDP/ZeRO-3-style param sharding: also shard the first replicated,
+#: divisible dim of every weight over the data axis; XLA all-gathers at use.
+#: Off by default; --opt fsdp=1.
+FSDP_PARAMS: bool = False
+
+
+def param_shardings(mesh, cfg: ModelConfig, params_sds):
+    n_exp = cfg.moe.n_experts if cfg.moe else 0
+    model_size = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    specs = shrd.param_specs(params_sds, n_experts=n_exp,
+                             model_axis_size=model_size, mesh=mesh)
+    if FSDP_PARAMS and "data" in mesh.axis_names:
+        specs = shrd.zero1_specs(params_sds, specs, mesh.shape["data"])
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def state_shardings(mesh, cfg: ModelConfig, state_sds, zero1: bool = True):
+    """TrainState shardings: params TP; moments TP + ZeRO-1 over data."""
+    p_shard = param_shardings(mesh, cfg, state_sds.params)
+    p_specs = jax.tree_util.tree_map(lambda s: s.spec, p_shard,
+                                     is_leaf=lambda x: isinstance(x, NamedSharding))
+    if zero1 and "data" in mesh.axis_names:
+        m_specs = shrd.zero1_specs(state_sds.params, p_specs, mesh.shape["data"])
+    else:
+        m_specs = p_specs
+    to_ns = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    m_shard = to_ns(m_specs)
+    opt = {"m": m_shard, "v": m_shard, "step": NamedSharding(mesh, P())}
+    if "master" in state_sds.opt:
+        opt["master"] = m_shard
+    comp = (
+        None
+        if state_sds.comp is None
+        else type(state_sds.comp)(error=to_ns(m_specs))
+    )
+    return type(state_sds)(
+        params=p_shard, opt=opt, comp=comp, step=NamedSharding(mesh, P())
+    )
+
+
+def cache_shardings(mesh, cfg: ModelConfig, caches_sds, batch_size: int):
+    """Decode caches: batch over (pod,data) when divisible; kv heads / ssm
+    channels over model; ring ``pos``/scalars replicated."""
+    dp = _dp_axes(mesh)
+    dp = dp if batch_size % max(_dp_size(mesh), 1) == 0 else ()
+    dp_or_none = dp if dp else None
+    model = "model" if "model" in mesh.axis_names else None
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        # KV k/v: (..., B, C, Hkv, dh) ; ssm state: (..., B, h, p, n)
+        # conv ring: (..., B, k-1, channels) ; pos: (..., C) ; length: (...)
+        if nd >= 4 and shape[-1] > 1 and shape[-2] > 1:
+            lead = nd - 4
+            if shape[-2] == cfg.n_kv_heads and cfg.n_kv_heads:
+                tp_size = max(mesh.shape.get("model", 1), 1)
+                heads_ok = cfg.n_kv_heads % tp_size == 0
+                if KV_SEQ_SHARD and not heads_ok:
+                    # flash-decode: context axis over model ranks
+                    return P(*([None] * lead + [dp_or_none, model, None, None]))
+                head_ax = model if heads_ok else None
+                return P(*([None] * lead + [dp_or_none, None, head_ax, None]))
+            if cfg.ssm and shape[-1] == cfg.ssm.d_state and shape[-2] == cfg.ssm.head_dim:
+                return P(*([None] * lead + [dp_or_none, model, None, None]))
+        if nd >= 3 and cfg.ssm and shape[-1] == cfg.d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state:
+            lead = nd - 3
+            return P(*([None] * lead + [dp_or_none, None, model]))
+        if nd >= 3 and shape[-1] == cfg.d_model:     # memory/ctx (B, T, d)
+            lead = nd - 3
+            return P(*([None] * lead + [dp_or_none, None, None]))
+        return P()
+
+    specs = jax.tree_util.tree_map(spec_for, caches_sds)
+
+    def checked(leaf, spec: P):
+        parts = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        ok = []
+        for i, a in enumerate(parts):
+            size = 1
+            for ax in (a if isinstance(a, tuple) else (a,) if a else ()):
+                size *= mesh.shape[ax]
+            ok.append(a if a and leaf.shape[i] % size == 0 else None)
+        return NamedSharding(mesh, P(*ok))
+
+    return jax.tree_util.tree_map(checked, caches_sds, specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Abstract state builders (no allocation: eval_shape)
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig):
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, tcfg), jax.random.PRNGKey(0)
+    )
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: M.init_caches(cfg, batch, max_len=max_len, dtype=dtype)
+    )

@@ -1,0 +1,28 @@
+"""LM substrate: configs, layers, attention, SSM, MoE, assembled models."""
+from repro.models.config import (
+    CrossAttnConfig,
+    EncDecConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_caches,
+    init_params,
+    prefill,
+)
+
+__all__ = [
+    "CrossAttnConfig",
+    "EncDecConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "decode_step",
+    "forward",
+    "init_caches",
+    "init_params",
+    "prefill",
+]

@@ -1,0 +1,298 @@
+"""Attention: GQA with RoPE, qk-norm, QKV bias, sliding windows, cross-attn,
+and ring-buffer KV-cache decode — every attention variant the assigned pool
+needs.
+
+All heads are tensor-parallel over the ``model`` axis (column-parallel QKV,
+row-parallel output).  Shapes: hidden (B, S, d); q (B, S, Hq, dh);
+k/v (B, S, Hkv, dh) with Hq % Hkv == 0 (GQA groups).
+
+The KV cache is a ring buffer of capacity = sliding window for SWA layers
+(bounded memory at 500k contexts) or max_len for full attention.  Keys are
+stored with RoPE already applied at their absolute position; a parallel
+``pos`` array holds absolute positions for masking, so wrap-around eviction
+is just overwriting slots.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, he_init, rms_norm, rope_freqs
+from repro.models.sharding import DATA, TP, shard
+
+NEG_INF = -1e30
+
+#: Sequence-parallel attention fallback for head counts that do not divide
+#: the model axis (see the comment at the use site).  OFF by default so the
+#: recorded dry-run baselines stay paper-faithful; the perf pass enables it
+#: via ``--opt seqshard=1`` and EXPERIMENTS.md §Perf records the delta.
+SEQ_SHARD_FALLBACK: bool = False
+
+#: bf16 attention-score buffers (reductions stay f32).  Halves the dominant
+#: HBM traffic of long-sequence prefill (the (B,H,S,S) score/softmax
+#: buffers).  OFF by default (baseline f32 scores); ``--opt attnbf16=1``.
+ATTN_BF16_SCORES: bool = False
+
+#: Flash-style chunked attention for the causal no-cache path: online
+#: softmax over key blocks of this size; the (S, S) score matrix is never
+#: materialized — only (S, CHUNK) tiles live at once.  0 = off (baseline
+#: full materialization).  The structural fix for the prefill memory bound
+#: identified in EXPERIMENTS.md §Perf cell B.
+ATTN_KV_CHUNK: int = 0
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer cache.  k/v: (B, C, Hkv, dh); pos: (C,) absolute positions
+    of each slot (-1 = empty); length: () int32 tokens generated so far."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+    length: jnp.ndarray
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    cap = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, cap, cfg.n_kv_heads, cfg.d_head)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        pos=jnp.full((cap,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_append(cache: KVCache, k: jnp.ndarray, v: jnp.ndarray) -> KVCache:
+    """Append S new tokens (absolute positions length..length+S) to the ring."""
+    s = k.shape[1]
+    cap = cache.k.shape[1]
+    newpos = cache.length + jnp.arange(s, dtype=jnp.int32)
+    if s >= cap:
+        # keep only the last `cap` tokens, laid out by their ring slots
+        k_tail, v_tail, p_tail = k[:, -cap:], v[:, -cap:], newpos[-cap:]
+        slots = p_tail % cap
+        inv = jnp.argsort(slots)
+        return KVCache(
+            k=k_tail[:, inv].astype(cache.k.dtype),
+            v=v_tail[:, inv].astype(cache.v.dtype),
+            pos=p_tail[inv],
+            length=cache.length + s,
+        )
+    slots = newpos % cap
+    return KVCache(
+        k=cache.k.at[:, slots].set(k.astype(cache.k.dtype)),
+        v=cache.v.at[:, slots].set(v.astype(cache.v.dtype)),
+        pos=cache.pos.at[slots].set(newpos),
+        length=cache.length + s,
+    )
+
+
+def init_attn_params(key, cfg: ModelConfig, d_ctx: int | None = None) -> dict:
+    """d_ctx != None -> cross-attention (kv projected from the context)."""
+    d, dh = cfg.d_model, cfg.d_head
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    dkv = d_ctx if d_ctx else d
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": he_init(ks[0], (d, hq * dh)),
+        "wk": he_init(ks[1], (dkv, hkv * dh)),
+        "wv": he_init(ks[2], (dkv, hkv * dh)),
+        "wo": he_init(ks[3], (hq * dh, d), fan_in=hq * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, ctx=None):
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    kv_in = ctx if ctx is not None else x
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dh->bth", kv_in, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dh->bth", kv_in, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, kv_in.shape[1], hkv, dh)
+    v = v.reshape(b, kv_in.shape[1], hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask):
+    """Grouped SDPA.  mask: additive, broadcastable to (1, Hkv, 1, S, T)."""
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    groups = hq // hkv
+    q = q.reshape(b, s, hkv, groups, dh)
+    if ATTN_BF16_SCORES:
+        # keep the (B,H,S,T) buffers in the compute dtype end-to-end: same
+        # op count as the f32 path but half the bytes per pass.  bf16
+        # softmax is max-subtracted (exps <= 1); accumulation error is
+        # bounded by T*eps_bf16 ~ 0.25 at T=32k on the denominator -> ~1e-2
+        # relative on weights, acceptable for serving (documented).
+        scores = jnp.einsum("bshgd,bthd->bhgst", q, k)
+        scores = scores * scores.dtype.type(dh**-0.5) + mask.astype(scores.dtype)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    else:
+        scores = jnp.einsum("bshgd,bthd->bhgst", q, k).astype(jnp.float32)
+        scores = scores * (dh**-0.5) + mask.astype(jnp.float32)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", w, v)
+    return shard(out.reshape(b, s, hq * dh), DATA, None, TP)
+
+
+def _sdpa_chunked(q, k, v, *, window: int | None, chunk: int):
+    """Online-softmax attention over key blocks (flash-attention recipe in
+    pure JAX): carry (o, m, l) running statistics, process (S, chunk) score
+    tiles.  Causal (+ optional sliding window); q/k/v as in :func:`_sdpa`.
+    """
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    groups = hq // hkv
+    qg = q.reshape(b, s, hkv, groups, dh)
+    n_blocks = s // chunk
+    qpos = jnp.arange(s)[:, None]
+    scale = dh**-0.5
+
+    def body(carry, blk):
+        o, m, l = carry                               # (b,h,g,s,dh) (b,h,g,s) (b,h,g,s)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, blk * chunk, chunk, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, blk * chunk, chunk, axis=1)
+        scores = jnp.einsum("bshgd,bthd->bhgst", qg, k_blk).astype(jnp.float32)
+        kpos = blk * chunk + jnp.arange(chunk)[None, :]
+        ok = kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        scores = scores * scale + jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+        m_blk = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        alpha = jnp.exp(m - m_new)
+        p_blk = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p_blk.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhgst,bthd->bhgsd", p_blk.astype(v.dtype), v_blk
+        ).astype(jnp.float32)
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((b, hkv, groups, s, dh), jnp.float32)
+    m0 = jnp.full((b, hkv, groups, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, groups, s), jnp.float32)
+    # unrolled so the dry-run cost analysis counts every block (a rolled
+    # while body is counted once); n_blocks is small (S/chunk)
+    (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), jnp.arange(n_blocks),
+                                unroll=min(n_blocks, 32))
+    out = (o / jnp.maximum(l[..., None], 1e-30)).astype(v.dtype)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq * dh)
+    return shard(out, DATA, None, TP)
+
+
+def attention(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    ctx: jnp.ndarray | None = None,
+    cache: KVCache | None = None,
+    causal: bool = True,
+) -> tuple[jnp.ndarray, KVCache | None]:
+    """One attention layer.
+
+    - training / prefill: ``cache=None`` -> (a)causal self-attention over
+      ``x`` (``causal=False`` for encoder stacks).
+    - decode: ``cache`` holds the ring buffer; ``x`` is the new token block.
+    - cross-attention: ``ctx`` is the encoder/vision memory (bidirectional,
+      no rope on the memory side, no cache).
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, ctx)
+    q = shard(q, DATA, None, TP, None)
+    k = shard(k, DATA, None, TP, None)
+    v = shard(v, DATA, None, TP, None)
+
+    if ctx is not None:
+        out = _sdpa(q, k, v, jnp.zeros((1, 1, 1, 1, 1), jnp.float32))
+        out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+        return shard(out, DATA, None, None), None
+
+    if cache is None:
+        pos = jnp.arange(s)[None, :]
+        cos, sin = rope_freqs(cfg.d_head, cfg.rope_theta, pos)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        # Sequence-parallel fallback: when the head count does not divide the
+        # model axis (e.g. qwen2's 12 q / 2 kv heads on TP=16) the head
+        # sharding above was dropped and attention would replicate across all
+        # TP ranks.  Shard the *query sequence* over the model axis instead:
+        # scores/AV compute then splits TP-ways (keys replicate — one
+        # all-gather of K/V per layer, S*Hkv*dh, is far cheaper than TP-x
+        # redundant S^2 compute).  See EXPERIMENTS.md §Perf (qwen2 cell).
+        mesh = jax.sharding.get_abstract_mesh()
+        if (
+            SEQ_SHARD_FALLBACK
+            and mesh is not None and not mesh.empty and TP in mesh.axis_names
+            and cfg.n_heads % mesh.shape[TP] != 0 and s % mesh.shape[TP] == 0
+        ):
+            q = shard(q, DATA, TP, None, None)
+        if causal and ATTN_KV_CHUNK and s % ATTN_KV_CHUNK == 0 and s > ATTN_KV_CHUNK:
+            out = _sdpa_chunked(q, k, v, window=cfg.sliding_window,
+                                chunk=ATTN_KV_CHUNK)
+            new_cache = None
+        else:
+            if causal:
+                qpos = jnp.arange(s)[:, None]
+                kpos = jnp.arange(s)[None, :]
+                ok = kpos <= qpos
+                if cfg.sliding_window is not None:
+                    ok &= kpos > qpos - cfg.sliding_window
+                mask = jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+            else:
+                mask = jnp.zeros((1, 1, 1, 1, 1), jnp.float32)
+            out = _sdpa(q, k, v, mask)
+            new_cache = None
+    else:
+        offset = cache.length
+        pos = offset + jnp.arange(s)[None, :]
+        cos, sin = rope_freqs(cfg.d_head, cfg.rope_theta, pos)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        # same sequence-parallel fallback for the prefill path (s large)
+        mesh = jax.sharding.get_abstract_mesh()
+        if (
+            SEQ_SHARD_FALLBACK
+            and mesh is not None and not mesh.empty and TP in mesh.axis_names
+            and cfg.n_heads % mesh.shape[TP] != 0 and s % mesh.shape[TP] == 0
+        ):
+            q = shard(q, DATA, TP, None, None)
+        new_cache = cache_append(cache, k, v)
+        if ATTN_KV_CHUNK and s % ATTN_KV_CHUNK == 0 and s > ATTN_KV_CHUNK:
+            # prefill-from-scratch fast path: attend over the fresh K/V with
+            # the online-softmax tiles (the cache is still filled above).
+            # Only valid when this call starts the sequence (offset == 0) —
+            # the serving engine's prefill — documented in EXPERIMENTS §Perf.
+            out = _sdpa_chunked(q, k, v, window=cfg.sliding_window,
+                                chunk=ATTN_KV_CHUNK)
+        else:
+            qpos = (offset + jnp.arange(s))[:, None]        # (s, 1)
+            kpos = new_cache.pos[None, :]                   # (1, C)
+            ok = (kpos >= 0) & (kpos <= qpos)
+            if cfg.sliding_window is not None:
+                ok &= kpos > qpos - cfg.sliding_window
+            mask = jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+            out = _sdpa(q, new_cache.k.astype(q.dtype), new_cache.v.astype(q.dtype), mask)
+
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+    return shard(out, DATA, None, None), new_cache

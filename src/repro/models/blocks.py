@@ -1,0 +1,202 @@
+"""Transformer blocks for every family, stacked with ``jax.lax.scan``.
+
+Scan-over-layers keeps the HLO size (and the 512-way SPMD partitioning time)
+independent of depth — a 64-layer Mamba2 compiles as fast as a 2-layer one.
+Heterogeneous stacks (DeepSeek's dense first layer, vision cross-attention
+interleaving, enc-dec) are composed at the model level from homogeneous
+scanned groups.
+
+Block kinds:
+  dense  : ln -> attn -> ln -> SwiGLU MLP          (llama/qwen/minicpm)
+  moe    : ln -> attn -> ln -> MoE (+shared)       (mixtral/deepseek)
+  ssm    : ln -> mamba2 mixer                      (mamba2)
+  hybrid : ln -> (attn ∥ mamba)/2 -> ln -> MLP     (hymba parallel heads)
+  cross  : ln -> cross-attn -> ln -> MLP           (vision/enc-dec memory)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import KVCache
+from repro.models.config import ModelConfig
+from repro.models.layers import he_init, rms_norm, swiglu
+from repro.models.sharding import DATA, shard
+from repro.models.ssm import SSMState
+
+
+class LayerCaches(NamedTuple):
+    """Per-stack decode caches (leaves stacked on a leading layer axis)."""
+
+    kv: KVCache | None
+    ssm: SSMState | None
+
+
+#: Scan-over-layers unroll factor.  1 (default) = rolled while-loop: small
+#: HLO, fast 512-way SPMD compiles.  The dry-run sets this to the layer count
+#: for the single-pod roofline cells because XLA's cost_analysis does NOT
+#: multiply while-body FLOPs by the trip count — unrolling makes the reported
+#: HLO_FLOPs exact.
+SCAN_UNROLL: int = 1
+
+
+def _unroll(length: int) -> int:
+    return min(max(SCAN_UNROLL, 1), length)
+
+
+# ---------------------------------------------------------------------------
+# Single-block init / forward
+# ---------------------------------------------------------------------------
+
+
+def init_block_params(key, cfg: ModelConfig, kind: str, d_ctx: int = 0) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": jnp.ones((d,), jnp.float32)}
+    if kind == "dense" or kind == "moe" or kind == "hybrid":
+        p["attn"] = attn_mod.init_attn_params(ks[0], cfg)
+    if kind == "cross":
+        p["attn"] = attn_mod.init_attn_params(ks[0], cfg, d_ctx=d_ctx or d)
+    if kind in ("ssm", "hybrid"):
+        p["ssm"] = ssm_mod.init_ssm_params(ks[1], cfg)
+    if kind == "moe":
+        p["ln2"] = jnp.ones((d,), jnp.float32)
+        p["moe"] = moe_mod.init_moe_params(ks[2], cfg)
+    elif kind in ("dense", "hybrid", "cross") and cfg.d_ff:
+        p["ln2"] = jnp.ones((d,), jnp.float32)
+        f = cfg.d_ff
+        kg, ku, kd = jax.random.split(ks[3], 3)
+        p["mlp"] = {
+            "w_gate": he_init(kg, (d, f)),
+            "w_up": he_init(ku, (d, f)),
+            "w_down": he_init(kd, (f, d), fan_in=f),
+        }
+    return p
+
+
+def block_forward(
+    p: dict,
+    cfg: ModelConfig,
+    kind: str,
+    x: jnp.ndarray,
+    *,
+    kv: KVCache | None = None,
+    ssm_state: SSMState | None = None,
+    ctx: jnp.ndarray | None = None,
+    causal: bool = True,
+) -> tuple[jnp.ndarray, KVCache | None, SSMState | None, jnp.ndarray]:
+    """Returns (x, new_kv, new_ssm, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_kv, new_ssm = None, None
+
+    if kind == "cross":
+        a, _ = attn_mod.attention(p["attn"], cfg, h, ctx=ctx)
+        x = x + a
+    elif kind == "ssm":
+        s_out, new_ssm = ssm_mod.ssm_forward(p["ssm"], cfg, h, ssm_state)
+        x = x + s_out
+    elif kind == "hybrid":
+        a, new_kv = attn_mod.attention(p["attn"], cfg, h, cache=kv)
+        s_out, new_ssm = ssm_mod.ssm_forward(p["ssm"], cfg, h, ssm_state)
+        x = x + 0.5 * (a + s_out)          # Hymba: fused parallel heads
+    else:  # dense / moe self-attention
+        a, new_kv = attn_mod.attention(p["attn"], cfg, h, cache=kv, causal=causal)
+        x = x + a
+
+    if "moe" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        m_out, aux = moe_mod.moe_forward(p["moe"], cfg, h2)
+        x = x + m_out
+    elif "mlp" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + swiglu(
+            h2,
+            p["mlp"]["w_gate"].astype(x.dtype),
+            p["mlp"]["w_up"].astype(x.dtype),
+            p["mlp"]["w_down"].astype(x.dtype),
+        )
+    return shard(x, DATA, None, None), new_kv, new_ssm, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacked (scanned) groups
+# ---------------------------------------------------------------------------
+
+
+def stack_init(key, n_layers: int, cfg: ModelConfig, kind: str, d_ctx: int = 0):
+    """Init ``n_layers`` blocks and stack each leaf on a leading axis."""
+    keys = jax.random.split(key, n_layers)
+    layers = [init_block_params(k, cfg, kind, d_ctx) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def scan_blocks(
+    stack: dict,
+    cfg: ModelConfig,
+    kind: str,
+    x: jnp.ndarray,
+    *,
+    caches: LayerCaches | None = None,
+    ctx: jnp.ndarray | None = None,
+    causal: bool = True,
+    remat: str | None = None,
+) -> tuple[jnp.ndarray, LayerCaches | None, jnp.ndarray]:
+    """Run a homogeneous stack.  Returns (x, new_caches, aux_sum)."""
+
+    def body(carry, xs):
+        h, aux = carry
+        p_layer, kv, ssm_state = xs
+        h, new_kv, new_ssm, aux_l = block_forward(
+            p_layer, cfg, kind, h, kv=kv, ssm_state=ssm_state, ctx=ctx, causal=causal
+        )
+        return (h, aux + aux_l), (new_kv, new_ssm)
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+
+    kv_stack = caches.kv if caches is not None else None
+    ssm_stack = caches.ssm if caches is not None else None
+    n_layers = jax.tree_util.tree_leaves(stack)[0].shape[0]
+    (x, aux), (new_kv, new_ssm) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stack, kv_stack, ssm_stack),
+        unroll=_unroll(n_layers),
+    )
+    new_caches = (
+        LayerCaches(kv=new_kv, ssm=new_ssm) if caches is not None else None
+    )
+    return x, new_caches, aux
+
+
+def init_layer_caches(
+    cfg: ModelConfig,
+    n_layers: int,
+    kind: str,
+    batch: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+) -> LayerCaches:
+    """Stacked decode caches for one homogeneous group."""
+    kv = None
+    ssm = None
+    if kind in ("dense", "moe", "hybrid"):
+        one = attn_mod.init_cache(cfg, batch, max_len, dtype)
+        kv = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_layers,) + a.shape), one
+        )
+    if kind in ("ssm", "hybrid"):
+        one_s = ssm_mod.init_ssm_state(cfg, batch, dtype)
+        ssm = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_layers,) + a.shape), one_s
+        )
+    return LayerCaches(kv=kv, ssm=ssm)

@@ -1,0 +1,62 @@
+"""Shared low-level layers: RMSNorm, rotary embeddings, SwiGLU, initializers."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def he_init(key, shape, dtype=jnp.float32, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 else shape[-1]
+    return jax.random.normal(key, shape, dtype) * math.sqrt(1.0 / fan)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    return (xf * scale.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for rotary embeddings at the given positions.
+
+    Returns (cos, sin) of shape positions.shape + (head_dim // 2,).
+    """
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def softmax_cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, ignore_id: int = -1
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean token CE in f32; returns (loss, n_valid_tokens)."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != ignore_id
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, logz - gold, 0.0)
+    n = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / n, n

@@ -1,0 +1,334 @@
+"""Top-level models: decoder-only (dense/MoE/SSM/hybrid), vision cross-attn,
+and audio enc-dec — one functional API for training, prefill and decode.
+
+Public surface:
+  init_params(key, cfg)                         -> params pytree (f32)
+  forward(params, cfg, batch, ...)              -> (logits, aux)   [train]
+  init_caches(cfg, batch_size, max_len, ...)    -> decode caches
+  prefill(params, cfg, batch, caches, ...)      -> (logits, caches)
+  decode_step(params, cfg, tokens, caches, ...) -> (logits, caches)
+
+``batch`` is a dict: {"tokens": (B, S) int32} plus, per family,
+``ctx_embeds`` — the stub modality frontend output (vision tiles / audio
+frames), as the spec requires for [vlm]/[audio] entries.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import blocks as blk
+from repro.models.attention import KVCache
+from repro.models.blocks import LayerCaches
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_init, he_init, rms_norm
+from repro.models.sharding import DATA, TP, shard
+
+Params = dict
+Caches = dict
+
+
+def _kind(cfg: ModelConfig) -> str:
+    if cfg.family == "moe":
+        return "moe"
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.hybrid:
+        return "hybrid"
+    return "dense"
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {
+        "tok_embed": embed_init(ks[0], (cfg.vocab_size, d)),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = he_init(ks[1], (d, cfg.vocab_size))
+
+    if cfg.encdec is not None:
+        p["encoder"] = blk.stack_init(ks[2], cfg.encdec.encoder_layers, cfg, "dense")
+        p["enc_norm"] = jnp.ones((d,), jnp.float32)
+        p["decoder"] = _encdec_decoder_init(ks[3], cfg)
+        return p
+
+    if cfg.cross_attn is not None and cfg.cross_attn.every:
+        every = cfg.cross_attn.every
+        n_groups = cfg.n_layers // every
+        d_ctx = cfg.cross_attn.d_ctx or d
+        keys = jax.random.split(ks[2], n_groups)
+        selfs = [blk.stack_init(k, every, cfg, _kind(cfg)) for k in keys]
+        p["self_blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *selfs)
+        # the frontend projection maps d_ctx -> d_model once; cross-attn KV
+        # then consumes d_model-space memory
+        p["cross_blocks"] = blk.stack_init(ks[3], n_groups, cfg, "cross")
+        if d_ctx != d:
+            p["ctx_proj"] = he_init(ks[4], (d_ctx, d))
+        return p
+
+    n_scanned = cfg.n_layers - (1 if cfg.dense_first_layer_ff else 0)
+    if cfg.dense_first_layer_ff:
+        import dataclasses
+
+        dense_cfg = dataclasses.replace(cfg, d_ff=cfg.dense_first_layer_ff, moe=None)
+        p["dense0"] = blk.init_block_params(ks[5], dense_cfg, "dense")
+    p["blocks"] = blk.stack_init(ks[6], n_scanned, cfg, _kind(cfg))
+    return p
+
+
+def _encdec_decoder_init(key, cfg: ModelConfig):
+    """Decoder layer = self-attn + cross-attn + MLP, stacked."""
+    import dataclasses
+
+    keys = jax.random.split(key, cfg.n_layers)
+
+    def one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        d = cfg.d_model
+        mlp_cfg = dataclasses.replace(cfg)
+        return {
+            "self": blk.init_block_params(k1, dataclasses.replace(cfg, d_ff=0), "dense"),
+            "cross": blk.init_block_params(k2, mlp_cfg, "cross"),
+        }
+
+    layers = [one(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _embed(p: Params, cfg: ModelConfig, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    x = p["tok_embed"][tokens].astype(dtype)
+    return shard(x, DATA, None, None)
+
+
+def _logits(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    head = p["tok_embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return shard(logits, DATA, None, TP)
+
+
+def _project_ctx(p: Params, ctx: jnp.ndarray | None, dtype):
+    if ctx is None:
+        return None
+    ctx = ctx.astype(dtype)
+    if "ctx_proj" in p:
+        ctx = jnp.einsum("btc,cd->btd", ctx, p["ctx_proj"].astype(dtype))
+    return shard(ctx, DATA, None, None)
+
+
+def _encode(p: Params, cfg: ModelConfig, ctx_embeds: jnp.ndarray, dtype, remat=None):
+    """Bidirectional encoder over stub frames (enc-dec family)."""
+    h = shard(ctx_embeds.astype(dtype), DATA, None, None)
+    h, _, _ = blk.scan_blocks(p["encoder"], cfg, "dense", h, causal=False, remat=remat)
+    return rms_norm(h, p["enc_norm"], cfg.norm_eps)
+
+
+def _decoder_encdec(p, cfg, x, memory, caches: LayerCaches | None, remat=None):
+    """Scan enc-dec decoder layers (self + cross + mlp)."""
+
+    def body(carry, xs):
+        h, aux = carry
+        layer, kv = xs
+        h, new_kv, _, _ = blk.block_forward(layer["self"], cfg, "dense", h, kv=kv)
+        h, _, _, _ = blk.block_forward(layer["cross"], cfg, "cross", h, ctx=memory)
+        return (h, aux), new_kv
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    kv = caches.kv if caches is not None else None
+    (x, _), new_kv = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (p["decoder"], kv),
+        unroll=blk._unroll(cfg.n_layers),
+    )
+    return x, (LayerCaches(kv=new_kv, ssm=None) if caches is not None else None)
+
+
+def _vision_stack(p, cfg, x, ctx, caches: dict | None, remat=None):
+    """Outer scan over groups: ``every`` self layers then one cross layer."""
+    kind = _kind(cfg)
+
+    every = cfg.cross_attn.every
+
+    def group_body(carry, xs):
+        h, aux = carry
+        selfs, cross, kv = xs
+
+        def inner(c2, xs2):
+            h2, aux2 = c2
+            layer, kv_l = xs2
+            h2, new_kv, _, aux_l = blk.block_forward(layer, cfg, kind, h2, kv=kv_l)
+            return (h2, aux2 + aux_l), new_kv
+
+        (h, aux), new_kv = jax.lax.scan(inner, (h, aux), (selfs, kv),
+                                        unroll=blk._unroll(every))
+        h, _, _, _ = blk.block_forward(cross, cfg, "cross", h, ctx=ctx)
+        return (h, aux), new_kv
+
+    if remat == "full":
+        group_body = jax.checkpoint(group_body)
+    elif remat == "dots":
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    kv = caches["layers"].kv if caches is not None else None
+    n_groups = cfg.n_layers // every
+    (x, aux), new_kv = jax.lax.scan(
+        group_body, (x, jnp.zeros((), jnp.float32)),
+        (p["self_blocks"], p["cross_blocks"], kv),
+        unroll=blk._unroll(n_groups),
+    )
+    new_caches = LayerCaches(kv=new_kv, ssm=None) if caches is not None else None
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward (training) / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _run(
+    p: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    caches: Caches | None,
+    dtype,
+    remat: str | None,
+) -> tuple[jnp.ndarray, Caches | None, jnp.ndarray]:
+    tokens = batch["tokens"]
+    x = _embed(p, cfg, tokens, dtype)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.encdec is not None:
+        if batch.get("ctx_embeds") is not None:
+            memory = _encode(p, cfg, batch["ctx_embeds"], dtype, remat)
+        else:
+            memory = caches["memory"].astype(dtype)
+        layer_caches = caches["layers"] if caches is not None else None
+        x, new_layers = _decoder_encdec(p, cfg, x, memory, layer_caches, remat)
+        new_caches = (
+            {"layers": new_layers, "memory": memory.astype(caches["memory"].dtype)}
+            if caches is not None
+            else None
+        )
+        return _logits(p, cfg, x), new_caches, aux
+
+    if cfg.cross_attn is not None and cfg.cross_attn.every:
+        if batch.get("ctx_embeds") is not None:
+            ctx = _project_ctx(p, batch["ctx_embeds"], dtype)
+        else:
+            ctx = caches["ctx"].astype(dtype)
+        x, new_layers, aux = _vision_stack(p, cfg, x, ctx, caches, remat)
+        new_caches = (
+            {"layers": new_layers, "ctx": ctx.astype(caches["ctx"].dtype)}
+            if caches is not None
+            else None
+        )
+        return _logits(p, cfg, x), new_caches, aux
+
+    if "dense0" in p:
+        import dataclasses
+
+        dense_cfg = dataclasses.replace(cfg, d_ff=cfg.dense_first_layer_ff, moe=None)
+        kv0 = caches["dense0"].kv if caches is not None else None
+        kv0 = jax.tree_util.tree_map(lambda a: a[0], kv0) if kv0 is not None else None
+        x, new_kv0, _, _ = blk.block_forward(p["dense0"], dense_cfg, "dense", x, kv=kv0)
+    layer_caches = caches["layers"] if caches is not None else None
+    x, new_layers, aux = blk.scan_blocks(
+        p["blocks"], cfg, _kind(cfg), x, caches=layer_caches, remat=remat
+    )
+    new_caches = None
+    if caches is not None:
+        new_caches = {"layers": new_layers}
+        if "dense0" in p:
+            new_caches["dense0"] = LayerCaches(
+                kv=jax.tree_util.tree_map(lambda a: a[None], new_kv0), ssm=None
+            )
+    return _logits(p, cfg, x), new_caches, aux
+
+
+def forward(
+    p: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    dtype=jnp.float32,
+    remat: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/scoring forward: full-sequence causal logits + MoE aux."""
+    logits, _, aux = _run(p, cfg, batch, None, dtype, remat)
+    return logits, aux
+
+
+def init_caches(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> Caches:
+    if cfg.encdec is not None:
+        return {
+            "layers": blk.init_layer_caches(cfg, cfg.n_layers, "dense", batch, max_len, dtype),
+            "memory": jnp.zeros((batch, cfg.encdec.n_ctx_tokens, cfg.d_model), dtype),
+        }
+    if cfg.cross_attn is not None and cfg.cross_attn.every:
+        every = cfg.cross_attn.every
+        n_groups = cfg.n_layers // every
+        one = attn_mod.init_cache(cfg, batch, max_len, dtype)
+        kv = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_groups, every) + a.shape), one
+        )
+        return {
+            "layers": LayerCaches(kv=kv, ssm=None),
+            "ctx": jnp.zeros((batch, cfg.cross_attn.n_ctx_tokens, cfg.d_model), dtype),
+        }
+    kind = _kind(cfg)
+    n_scanned = cfg.n_layers - (1 if cfg.dense_first_layer_ff else 0)
+    caches: Caches = {
+        "layers": blk.init_layer_caches(cfg, n_scanned, kind, batch, max_len, dtype)
+    }
+    if cfg.dense_first_layer_ff:
+        caches["dense0"] = blk.init_layer_caches(cfg, 1, "dense", batch, max_len, dtype)
+    return caches
+
+
+def prefill(
+    p: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    caches: Caches,
+    *,
+    dtype=jnp.float32,
+    remat: str | None = None,
+) -> tuple[jnp.ndarray, Caches]:
+    """Process the prompt, fill caches, return full-sequence logits."""
+    logits, new_caches, _ = _run(p, cfg, batch, caches, dtype, remat)
+    return logits, new_caches
+
+
+def decode_step(
+    p: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    caches: Caches,
+    *,
+    dtype=jnp.float32,
+) -> tuple[jnp.ndarray, Caches]:
+    """One autoregressive step.  tokens: (B, S_new) with S_new typically 1."""
+    logits, new_caches, _ = _run(p, cfg, {"tokens": tokens}, caches, dtype, None)
+    return logits[:, -1], new_caches

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts: token-choice top-k routing with capacity dispatch.
+
+TPU/SPMD-native formulation (the MaxText/Flaxformer "dropping" algorithm):
+tokens are routed within fixed-size groups via one-hot dispatch/combine
+einsums, so the computation is fully static — it compiles identically at any
+device count and the expert dimension shards cleanly:
+
+* **EP** (expert-parallel) when ``n_experts %% model_axis == 0``: expert
+  weights sharded over ``model`` on the expert dim; the dispatch einsum
+  becomes the all-to-all.
+* **TP fallback** otherwise (e.g. Mixtral's 8 experts on a 16-way axis):
+  every expert's FFN is column/row-sharded over ``model``.
+
+Supports DeepSeekMoE-style *shared experts* (always-on dense path) plus
+normalized top-k routing, capacity factor, and the load-balance aux loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import he_init, swiglu
+from repro.models.sharding import DATA, TP, shard
+
+#: tokens per routing group (memory knob for the dispatch one-hots)
+GROUP = 2048
+
+
+def init_moe_params(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": he_init(ks[0], (d, m.n_experts)),
+        "experts_gate": he_init(ks[1], (m.n_experts, d, f)),
+        "experts_up": he_init(ks[2], (m.n_experts, d, f)),
+        "experts_down": he_init(ks[3], (m.n_experts, f, d), fan_in=f),
+    }
+    if m.n_shared:
+        fs = m.n_shared * f
+        p["shared"] = {
+            "w_gate": he_init(ks[4], (d, fs)),
+            "w_up": he_init(ks[5], (d, fs)),
+            "w_down": he_init(ks[6], (fs, d), fan_in=fs),
+        }
+    return p
+
+
+def moe_forward(
+    p: dict, cfg: ModelConfig, x: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d).  Returns (out, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    g = min(GROUP, s)
+    ng = s // g if s % g == 0 else 1
+    if s % g != 0:
+        g = s
+    xg = x.reshape(b, ng, g, d)
+
+    logits = jnp.einsum("bngd,de->bnge", xg, p["router"].astype(jnp.float32).astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)      # (b,ng,g,e)
+    top_w, top_i = jax.lax.top_k(probs, k)                            # (b,ng,g,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)   # renormalize
+
+    # capacity positions: rank of each assignment within its expert
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)              # (b,ng,g,k,e)
+    flat = onehot.reshape(b, ng, g * k, e)
+    pos = jnp.cumsum(flat, axis=2) - flat                             # rank in group
+    pos = pos.reshape(b, ng, g, k, e)
+    cap = int(g * k / e * m.capacity_factor) + 1
+    keep = (pos < cap) & (onehot > 0)
+    slot = jnp.where(keep, pos, 0).astype(jnp.int32)
+
+    # dispatch/combine one-hots: (b, ng, g, e, cap)
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    dispatch = slot_oh.sum(axis=3)                                    # over k
+    combine = jnp.einsum("bngke,bngkec,bngk->bngec", onehot.astype(x.dtype),
+                         slot_oh, top_w.astype(x.dtype))
+
+    ein = jnp.einsum("bngec,bngd->bnecd", dispatch, xg)               # (b,ng,e,cap,d)
+    ep_ok = _ep_ok(e)
+    ein = shard(ein, DATA, None, TP if ep_ok else None, None, None)
+    h_gate = jnp.einsum("bnecd,edf->bnecf", ein, p["experts_gate"].astype(x.dtype))
+    h_up = jnp.einsum("bnecd,edf->bnecf", ein, p["experts_up"].astype(x.dtype))
+    h = jax.nn.silu(h_gate) * h_up
+    h = shard(h, DATA, None, TP if ep_ok else None, None, None if ep_ok else TP)
+    eout = jnp.einsum("bnecf,efd->bnecd", h, p["experts_down"].astype(x.dtype))
+    out = jnp.einsum("bngec,bnecd->bngd", combine, eout)
+
+    if m.n_shared:
+        out = out + swiglu(
+            xg,
+            p["shared"]["w_gate"].astype(x.dtype),
+            p["shared"]["w_up"].astype(x.dtype),
+            p["shared"]["w_down"].astype(x.dtype),
+        )
+
+    # load-balance aux: E * sum_e(frac_tokens_e * mean_prob_e)
+    frac = dispatch.sum(axis=(2, 4)) / (g * k)                        # (b,ng,e)
+    mean_p = probs.mean(axis=2)                                       # (b,ng,e)
+    aux = e * jnp.mean(jnp.sum(frac.astype(jnp.float32) * mean_p, axis=-1))
+
+    out = shard(out.reshape(b, s, d), DATA, None, None)
+    return out, aux
+
+
+def _ep_ok(n_experts: int) -> bool:
+    """Expert-parallel iff the model axis divides the expert count."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or TP not in mesh.axis_names:
+        return True
+    return n_experts % mesh.shape[TP] == 0

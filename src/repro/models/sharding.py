@@ -1,0 +1,182 @@
+"""Sharding rules: GSPMD partition specs for every parameter and activation.
+
+Mesh axes (production): ``(pod, data, model)`` multi-pod or ``(data, model)``
+single-pod.  Batch shards over ``(pod, data)``; tensor-parallel dims over
+``model``.  Model code never touches the mesh directly — it calls
+:func:`shard` with *logical* axes and the helper adapts to whatever mesh is
+active (dropping absent axes, no-op outside a mesh so smoke tests run on one
+CPU device unchanged).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+#: logical batch axes (flattened onto whichever of these exist in the mesh)
+DATA = ("pod", "data")
+#: tensor-parallel axis
+TP = "model"
+
+
+def current_axis_names() -> tuple[str, ...]:
+    mesh = jax.sharding.get_abstract_mesh()
+    return tuple(mesh.axis_names) if mesh is not None and not mesh.empty else ()
+
+
+def _filter(axis, present) -> Any:
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in present)
+        return kept if kept else None
+    return axis if axis in present else None
+
+
+def logical(*axes) -> P:
+    """PartitionSpec from logical axes, filtered to the active mesh."""
+    present = current_axis_names()
+    return P(*(_filter(a, present) for a in axes))
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint on logical axes.
+
+    No-op without a mesh; drops any axis whose mesh size does not divide the
+    corresponding array dim (e.g. 12 attention heads on a 16-way model axis)
+    — constraining those forces XLA into involuntary full rematerialization.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    present = tuple(mesh.axis_names)
+    spec = []
+    for i, axis in enumerate(axes):
+        a = _filter(axis, present)
+        if a is not None and x.shape[i] % _axis_size(mesh, a) != 0:
+            a = None
+        spec.append(a)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules
+# ---------------------------------------------------------------------------
+#
+# Rules map a leaf's path (joined with '/') to a spec over its TRAILING dims;
+# leading (stacked-layer) dims are padded with None.  First match wins.
+
+_RULES: list[tuple[str, tuple]] = [
+    # embeddings / unembedding: vocab over TP
+    (r"tok_embed$", (TP, None)),
+    (r"lm_head$", (None, TP)),
+    (r"ctx_proj$", (None, TP)),
+    # attention: column-parallel QKV, row-parallel output
+    (r"(wq|wk|wv)$", (None, TP)),
+    (r"(bq|bk|bv)$", (TP,)),
+    (r"wo$", (TP, None)),
+    # dense / shared-expert MLP: column in, row out
+    (r"(w_gate|w_up)$", (None, TP)),
+    (r"w_down$", (TP, None)),
+    # MoE experts: expert-parallel when E % model == 0 (checked at runtime by
+    # divisibility), else fall back to per-expert tensor parallel
+    (r"experts_(gate|up)$", ("EP_OR_TP_IN", None, None)),
+    (r"experts_down$", ("EP_OR_TP_OUT", None, None)),
+    (r"router$", (None, None)),
+    # Mamba/SSD: channel dims over TP
+    (r"in_proj$", (None, TP)),
+    (r"out_proj$", (TP, None)),
+    (r"conv_w$", (TP, None)),
+    (r"conv_b$", (TP,)),
+    (r"(A_log|dt_bias)$", (None,)),
+    (r"(D)$", (None,)),
+    # norms, scalars: replicated
+    (r".*", ()),
+]
+
+
+def _spec_for(path: str, shape: tuple[int, ...], ep_ok: bool,
+              sizes: dict[str, int]) -> P:
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            spec = tuple(spec)
+            if spec and spec[0] == "EP_OR_TP_IN":
+                spec = (TP, None, None) if ep_ok else (None, None, TP)
+            elif spec and spec[0] == "EP_OR_TP_OUT":
+                spec = (TP, None, None) if ep_ok else (None, TP, None)
+            pad = (None,) * (len(shape) - len(spec))
+            full = pad + spec
+            # drop axes that do not divide the dim (e.g. vocab 122753 on a
+            # 16-way model axis): those weights replicate instead — vocab
+            # padding recovers the sharding, see EXPERIMENTS.md §Perf.
+            checked = tuple(
+                a if a is None or shape[i] % sizes.get(a, 1) == 0 else None
+                for i, a in enumerate(full)
+            )
+            return P(*checked)
+    return P()
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def param_specs(params, n_experts: int = 0, model_axis_size: int = 1,
+                mesh=None):
+    """Pytree of PartitionSpec matching ``params``.
+
+    ``n_experts``/``model_axis_size`` decide expert-parallel vs in-expert
+    tensor-parallel sharding for MoE weights.  ``mesh`` (or the ambient
+    abstract mesh) provides axis sizes for divisibility checks.
+    """
+    ep_ok = n_experts > 0 and model_axis_size > 0 and n_experts % model_axis_size == 0
+    if mesh is None:
+        mesh = jax.sharding.get_abstract_mesh()
+    sizes = dict(mesh.shape) if mesh is not None and not mesh.empty else {}
+    if model_axis_size and TP not in sizes:
+        sizes[TP] = model_axis_size
+
+    def to_spec(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        return _spec_for(name, tuple(leaf.shape), ep_ok, sizes)
+
+    return jax.tree_util.tree_map_with_path(to_spec, params)
+
+
+def zero1_specs(params, specs, data_size: int, data_axis: str = "data"):
+    """ZeRO-1: optimizer-state specs with the first replicated, divisible dim
+    sharded over the data axis (XLA then reduce-scatters the update and
+    all-gathers the result).  Non-divisible or already-sharded dims stay put.
+    """
+
+    def upgrade(leaf, spec: P) -> P:
+        parts = tuple(spec)
+        if leaf.ndim == 0:
+            return spec
+        shape = leaf.shape
+        if not parts:
+            parts = (None,) * leaf.ndim
+        if parts[0] is None and shape[0] % max(data_size, 1) == 0:
+            return P(data_axis, *parts[1:])
+        return spec
+
+    return jax.tree_util.tree_map(upgrade, params, specs)

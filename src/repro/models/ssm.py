@@ -1,0 +1,243 @@
+"""Mamba2 / SSD (state-space duality) blocks — chunked matmul-friendly scan.
+
+TPU adaptation of the Mamba2 kernel: the chunked SSD algorithm decomposes the
+selective-scan into (a) intra-chunk quadratic attention-like products that map
+straight onto the MXU and (b) a tiny inter-chunk state recurrence, exactly the
+"long vector = big tile + short carry" structure the paper's co-design favors.
+The chunk length is the VL-analogue knob here (cfg.ssm.chunk).
+
+Shapes follow the Mamba2 paper: d_inner = expand*d_model, heads of size
+``head_dim`` (p), state size n, B/C shared per group (n_groups).
+
+Decode keeps an SSMState (recurrent state + conv ring) instead of a KV cache:
+O(1) memory per token — why the ``long_500k`` cells run on SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import he_init, rms_norm
+from repro.models.sharding import DATA, TP, shard
+
+
+class SSMState(NamedTuple):
+    """Decode cache: recurrent state (B, h, p, n) + conv ring (B, d_conv-1, C)."""
+
+    state: jnp.ndarray
+    conv: jnp.ndarray
+
+
+#: Mixed-precision SSD: keep the decay path (dt, cumsums, exp) in f32 but run
+#: the big einsums (y_diag/states/y_off) in bf16.  Halves the dominant memory
+#: traffic of the chunked scan; OFF by default (baseline f32), enabled by the
+#: perf pass via ``--opt ssdbf16=1`` (EXPERIMENTS.md §Perf, mamba2 cell).
+SSD_BF16: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_params(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d, di = cfg.d_model, cfg.d_inner
+    h, n, g = cfg.n_ssm_heads, s.d_state, s.n_groups
+    d_xbc = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (di), x (di), B (g*n), C (g*n), dt (h)]
+        "in_proj": he_init(ks[0], (d, 2 * di + 2 * g * n + h)),
+        "conv_w": he_init(ks[1], (d_xbc, s.d_conv)),
+        "conv_b": jnp.zeros((d_xbc,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.full((h,), -4.6, jnp.float32),    # softplus^-1(0.01)
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": he_init(ks[2], (di, d)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular segment sums: out[..., i, j] = sum_{k=j+1..i} a[..., k]
+    for i >= j, -inf above the diagonal."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    i = jnp.arange(q)[:, None]
+    j = jnp.arange(q)[None, :]
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    xd: jnp.ndarray,       # (b, l, h, p)  — inputs pre-multiplied by dt
+    ad: jnp.ndarray,       # (b, l, h)     — dt * A (negative)
+    B: jnp.ndarray,        # (b, l, g, n)
+    C: jnp.ndarray,        # (b, l, g, n)
+    chunk: int,
+    init_state: jnp.ndarray | None = None,   # (b, h, p, n)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked state-space dual scan.  Returns (y (b,l,h,p), final_state)."""
+    b, l, h, p = xd.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, "sequence must be chunk-padded"
+    c, q = l // chunk, chunk
+    hg = h // g
+    # expand groups to heads
+    Bh = jnp.repeat(B, hg, axis=2)            # (b, l, h, n)
+    Ch = jnp.repeat(C, hg, axis=2)
+    xd = xd.reshape(b, c, q, h, p)
+    Bh = Bh.reshape(b, c, q, h, n)
+    Ch = Ch.reshape(b, c, q, h, n)
+    ad = ad.reshape(b, c, q, h).transpose(0, 3, 1, 2)      # (b, h, c, q)
+    cums = jnp.cumsum(ad, axis=-1)                          # (b, h, c, q)
+
+    # decay factors computed in f32 (exp sensitivity), einsums in xd.dtype
+    # (bf16 under SSD_BF16 — the memory-traffic lever, see §Perf)
+    dt_e = xd.dtype
+
+    # (a) intra-chunk (quadratic in q — the MXU-friendly part)
+    Lmat = jnp.exp(_segsum(ad)).astype(dt_e)                # (b, h, c, q, q)
+    y_diag = jnp.einsum("bcihn,bcjhn,bhcij,bcjhp->bcihp", Ch, Bh, Lmat, xd)
+
+    # (b) per-chunk final states
+    decay_end = jnp.exp(cums[..., -1:] - cums).astype(dt_e)  # (b, h, c, q)
+    states = jnp.einsum("bhcj,bcjhn,bcjhp->bchpn", decay_end, Bh, xd)
+
+    # (c) inter-chunk recurrence (the tiny carry — always f32)
+    chunk_decay = jnp.exp(cums[..., -1])                    # (b, h, c)
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp                                       # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st.astype(jnp.float32)
+        return new, carry                                   # emit state BEFORE chunk
+
+    final, carried = jax.lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    carried = carried.transpose(1, 0, 2, 3, 4)              # (b, c, h, p, n)
+
+    # (d) contribution of the carried state inside each chunk
+    state_decay = jnp.exp(cums).astype(dt_e)                # (b, h, c, q)
+    y_off = jnp.einsum("bcihn,bchpn,bhci->bcihp", Ch,
+                       carried.astype(dt_e), state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final.astype(jnp.float32)
+
+
+def ssd_reference(xd, ad, B, C, init_state=None):
+    """Naive per-token recurrence oracle (tests compare chunked vs this)."""
+    b, l, h, p = xd.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    Bh = jnp.repeat(B, hg, axis=2)
+    Ch = jnp.repeat(C, hg, axis=2)
+    st = (
+        jnp.zeros((b, h, p, n), xd.dtype)
+        if init_state is None
+        else init_state.astype(xd.dtype)
+    )
+    ys = []
+    for t in range(l):
+        st = st * jnp.exp(ad[:, t])[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", Bh[:, t], xd[:, t]
+        )
+        ys.append(jnp.einsum("bhpn,bhn->bhp", st, Ch[:, t]))
+    return jnp.stack(ys, axis=1), st
+
+
+# ---------------------------------------------------------------------------
+# Full block forward
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 conv_state: jnp.ndarray | None):
+    """Depthwise causal conv1d.  u: (B, L, C); w: (C, K).  Returns (y, ring)."""
+    k = w.shape[1]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)                  # (B, L+K-1, C)
+    y = sum(up[:, i : i + u.shape[1]] * w[:, i].astype(u.dtype) for i in range(k))
+    y = y + b.astype(u.dtype)
+    new_ring = up[:, -(k - 1) :] if k > 1 else pad
+    return jax.nn.silu(y), new_ring
+
+
+def ssm_forward(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    state: SSMState | None = None,
+) -> tuple[jnp.ndarray, SSMState | None]:
+    """Mamba2 mixer.  x: (B, S, d).  state=None -> chunked training/prefill
+    pass (no state returned unless requested via return of final); state given
+    -> stateful decode (any S, scanned in chunks of 1 via the same SSD with
+    chunk=1... actually chunk=S when S divides)."""
+    s_cfg = cfg.ssm
+    b, l, d = x.shape
+    di, h, n, g = cfg.d_inner, cfg.n_ssm_heads, s_cfg.d_state, s_cfg.n_groups
+    ph = s_cfg.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    proj = shard(proj, DATA, None, TP)
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1
+    )
+    xbc = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_state = state.conv if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xin, Bc, Cc = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (b, l, h)
+    A = -jnp.exp(p["A_log"])                                        # (h,)
+    xh = xin.reshape(b, l, h, ph)
+    ssd_dtype = jnp.bfloat16 if SSD_BF16 else jnp.float32
+    Bg = Bc.reshape(b, l, g, n).astype(ssd_dtype)
+    Cg = Cc.reshape(b, l, g, n).astype(ssd_dtype)
+    xd = (xh.astype(jnp.float32) * dt[..., None]).astype(ssd_dtype)
+    ad = dt * A                                                     # (b, l, h) f32
+
+    init = state.state if state is not None else None
+    if l % s_cfg.chunk == 0 and l >= s_cfg.chunk:
+        y, final = ssd_chunked(xd, ad, Bg, Cg, s_cfg.chunk, init)
+    else:
+        # ragged tails and decode steps (l == 1): exact recurrence
+        y, final = ssd_reference(xd, ad, Bg, Cg, init)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(b, l, di).astype(x.dtype)
+
+    # gated RMSNorm then down-projection
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    out = shard(out, DATA, None, None)
+    new_state = SSMState(state=final, conv=new_conv) if state is not None else None
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    s = cfg.ssm
+    d_xbc = cfg.d_inner + 2 * s.n_groups * s.d_state
+    return SSMState(
+        state=jnp.zeros((batch, cfg.n_ssm_heads, s.head_dim, s.d_state), jnp.float32),
+        conv=jnp.zeros((batch, s.d_conv - 1, d_xbc), dtype),
+    )

@@ -1,0 +1,23 @@
+"""Optimizer substrate: AdamW, schedules (incl. MiniCPM's WSD), clipping,
+and int8 gradient compression with error feedback."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import constant, cosine_schedule, wsd_schedule
+from repro.optim.compression import (
+    CompressionState,
+    compress_tree,
+    compression_init,
+    decompress_tree,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "constant",
+    "cosine_schedule",
+    "wsd_schedule",
+    "CompressionState",
+    "compress_tree",
+    "compression_init",
+    "decompress_tree",
+]

@@ -1,0 +1,56 @@
+"""Int8 gradient compression with error feedback (distributed-opt trick).
+
+At multi-pod scale the DP gradient all-reduce over the ``pod`` axis crosses
+the slow inter-pod links; quantizing gradients to int8 (per-tensor scale)
+cuts that traffic 4x vs f32 / 2x vs bf16.  Error feedback keeps the *sum* of
+applied updates unbiased: the residual of each quantization is added back
+before the next one, so convergence matches uncompressed SGD/Adam to first
+order (Seide et al.; Karimireddy et al.).
+
+Usage in the train step::
+
+    g_q, scales, comp_state = compress_tree(grads, comp_state)
+    g_q = jax.lax.psum(g_q, 'pod')            # int8->int32 accumulate
+    grads = decompress_tree(g_q, scales, n_replicas)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any          # pytree of f32 residuals, same shapes as grads
+
+
+def compression_init(params) -> CompressionState:
+    return CompressionState(
+        error=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def _quantize(g: jnp.ndarray, err: jnp.ndarray):
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    new_err = g - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def compress_tree(grads, state: CompressionState):
+    """Returns (int8 tree, scale tree, new state)."""
+    trip = jax.tree_util.tree_map(_quantize, grads, state.error)
+    is3 = lambda t: isinstance(t, tuple)
+    q = jax.tree_util.tree_map(lambda t: t[0], trip, is_leaf=is3)
+    s = jax.tree_util.tree_map(lambda t: t[1], trip, is_leaf=is3)
+    e = jax.tree_util.tree_map(lambda t: t[2], trip, is_leaf=is3)
+    return q, s, CompressionState(error=e)
+
+
+def decompress_tree(q_tree, scale_tree, n_replicas: int = 1):
+    """Dequantize (after an integer psum over replicas: mean of replicas)."""
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s / n_replicas, q_tree, scale_tree
+    )

@@ -1,0 +1,43 @@
+"""LR schedules: cosine, constant, and MiniCPM's WSD (warmup-stable-decay).
+
+WSD (arXiv:2404.06395 §4): linear warmup -> long stable plateau -> short
+exponential/linear decay tail; the schedule the minicpm-2b arch trains with.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def wsd_schedule(
+    peak_lr: float,
+    warmup: int,
+    stable: int,
+    decay: int,
+    floor: float = 0.01,
+):
+    """Warmup-Stable-Decay: the tail decays exponentially to floor*peak."""
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        tail_prog = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        tail = peak_lr * jnp.exp(jnp.log(floor) * tail_prog)
+        out = jnp.where(step < warmup, warm, peak_lr)
+        return jnp.where(step > warmup + stable, tail, out)
+
+    return f

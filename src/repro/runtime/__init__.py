@@ -1,0 +1,7 @@
+"""Fault-tolerance runtime: heartbeats/straggler detection, elastic re-mesh
+planning, and the restart supervisor."""
+from repro.runtime.heartbeat import StepMonitor
+from repro.runtime.elastic import plan_mesh
+from repro.runtime.supervisor import run_with_restarts
+
+__all__ = ["StepMonitor", "plan_mesh", "run_with_restarts"]

@@ -1,0 +1,5 @@
+"""Serving stack: sampling, continuous batcher, generation engine."""
+from repro.serve.engine import GenerationConfig, ServeEngine
+from repro.serve.batcher import Batcher, Request
+
+__all__ = ["GenerationConfig", "ServeEngine", "Batcher", "Request"]

@@ -1,0 +1,80 @@
+"""Generation engine: prefill + decode loop over the model's cache API.
+
+Decode is one jitted step reused across iterations (cache shapes are static),
+so serving cost is 1 compile + N cheap steps — the production shape of the
+``decode_32k`` / ``long_500k`` dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 = greedy
+    top_k: int = 0                # 0 = no truncation
+    eos_id: int = -1              # -1 = never stop early
+    cache_len: int = 4096
+    dtype: Any = jnp.float32
+
+
+def sample_token(logits: jnp.ndarray, key, gcfg: GenerationConfig) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32."""
+    if gcfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / gcfg.temperature
+    if gcfg.top_k:
+        kth = jax.lax.top_k(logits, gcfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, gcfg: GenerationConfig):
+        self.cfg = cfg
+        self.params = params
+        self.gcfg = gcfg
+        self._decode = jax.jit(
+            functools.partial(M.decode_step, cfg=cfg, dtype=gcfg.dtype)
+        )
+
+    def generate(
+        self,
+        prompts: np.ndarray,
+        extras: dict | None = None,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """Greedy/sampled continuation for a (B, S) prompt batch."""
+        cfg, gcfg = self.cfg, self.gcfg
+        b, s = prompts.shape
+        caches = M.init_caches(cfg, b, max_len=gcfg.cache_len, dtype=gcfg.dtype)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extras:
+            batch.update(extras)
+        logits, caches = M.prefill(self.params, cfg, batch, caches, dtype=gcfg.dtype)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = sample_token(logits[:, -1], key, gcfg)
+        out.append(tok)
+        done = tok == gcfg.eos_id
+        for i in range(1, gcfg.max_new_tokens):
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(self.params, tokens=tok[:, None], caches=caches)
+            tok = sample_token(logits, sub, gcfg)
+            tok = jnp.where(done, gcfg.eos_id, tok)
+            out.append(tok)
+            done = done | (tok == gcfg.eos_id)
+            if gcfg.eos_id >= 0 and bool(done.all()):
+                break
+        return np.asarray(jnp.stack(out, axis=1))

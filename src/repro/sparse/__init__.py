@@ -1,0 +1,21 @@
+"""Sparse-matrix substrate: CSR / ELLPACK / SELL-C-sigma formats and the
+CAGE10-like generator used by the paper's SpMV evaluation."""
+from repro.sparse.formats import (
+    CSRMatrix,
+    EllpackMatrix,
+    SellCSigmaMatrix,
+    cage10_like,
+    csr_from_dense,
+    csr_to_dense,
+    random_csr,
+)
+
+__all__ = [
+    "CSRMatrix",
+    "EllpackMatrix",
+    "SellCSigmaMatrix",
+    "cage10_like",
+    "csr_from_dense",
+    "csr_to_dense",
+    "random_csr",
+]

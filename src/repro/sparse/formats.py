@@ -1,0 +1,265 @@
+"""Sparse formats for long-vector SpMV (paper §3.1, Gómez et al. [2]).
+
+Long-vector SpMV wants a layout where one vector instruction processes VL
+*rows* at once: ELLPACK transposed into (slice, column-step, row-in-slice)
+order, and its padding-reducing refinement SELL-C-sigma (sort rows by nnz in
+windows of sigma, slice in chunks of C=VL, pad each slice to its own width).
+
+Everything here is host-side numpy (the data pipeline); kernels consume the
+padded device arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PAD = -1  # column padding sentinel
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRMatrix:
+    """Compressed Sparse Row."""
+
+    indptr: np.ndarray    # (n_rows + 1,) int64
+    indices: np.ndarray   # (nnz,) int32
+    data: np.ndarray      # (nnz,) float
+    n_cols: int
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def row_lengths(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def matvec(self, x: np.ndarray) -> np.ndarray:
+        """Reference host SpMV."""
+        y = np.zeros(self.n_rows, dtype=np.result_type(self.data, x))
+        for r in range(self.n_rows):
+            lo, hi = self.indptr[r], self.indptr[r + 1]
+            y[r] = self.data[lo:hi] @ x[self.indices[lo:hi]]
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class EllpackMatrix:
+    """Uniform-width ELLPACK in slice-transposed (kernel) layout.
+
+    ``cols``/``vals`` have shape (n_slices, width, C): element (s, w, c) is
+    the w-th nonzero of row ``s*C + c``; padding has ``cols == PAD`` and
+    ``vals == 0``.  One Pallas grid step processes one slice (VL=C rows).
+    """
+
+    cols: np.ndarray      # (n_slices, width, C) int32
+    vals: np.ndarray      # (n_slices, width, C) float
+    n_rows: int
+    n_cols: int
+    nnz: int
+
+    @property
+    def c(self) -> int:
+        return self.cols.shape[2]
+
+    @property
+    def width(self) -> int:
+        return self.cols.shape[1]
+
+    @property
+    def n_slices(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def padded_nnz(self) -> int:
+        return self.cols.size
+
+    @property
+    def pad_factor(self) -> float:
+        return self.padded_nnz / max(self.nnz, 1)
+
+    def matvec(self, x: np.ndarray) -> np.ndarray:
+        """Reference host SpMV over the padded layout."""
+        xg = np.concatenate([x, np.zeros(1, x.dtype)])  # PAD -> 0 via index -1
+        safe = np.where(self.cols == PAD, len(x), self.cols)
+        y = np.einsum("swc,swc->sc", self.vals, xg[safe])
+        return y.reshape(-1)[: self.n_rows]
+
+
+@dataclasses.dataclass(frozen=True)
+class SellCSigmaMatrix:
+    """SELL-C-sigma: per-slice width, rows sigma-window sorted by length.
+
+    ``slice_cols[s]`` has shape (width_s, C).  ``perm`` maps sorted position
+    -> original row id (y must be scattered back through it).
+    """
+
+    slice_cols: tuple[np.ndarray, ...]
+    slice_vals: tuple[np.ndarray, ...]
+    perm: np.ndarray
+    n_rows: int
+    n_cols: int
+    nnz: int
+
+    @property
+    def c(self) -> int:
+        return self.slice_cols[0].shape[1]
+
+    @property
+    def padded_nnz(self) -> int:
+        return sum(c.size for c in self.slice_cols)
+
+    @property
+    def pad_factor(self) -> float:
+        return self.padded_nnz / max(self.nnz, 1)
+
+    def matvec(self, x: np.ndarray) -> np.ndarray:
+        xg = np.concatenate([x, np.zeros(1, x.dtype)])
+        y_sorted = []
+        for cols, vals in zip(self.slice_cols, self.slice_vals):
+            safe = np.where(cols == PAD, len(x), cols)
+            y_sorted.append(np.einsum("wc,wc->c", vals, xg[safe]))
+        y_sorted = np.concatenate(y_sorted)[: self.n_rows]
+        y = np.zeros_like(y_sorted)
+        y[self.perm] = y_sorted
+        return y
+
+
+# ---------------------------------------------------------------------------
+# Conversions
+# ---------------------------------------------------------------------------
+
+
+def csr_from_dense(dense: np.ndarray) -> CSRMatrix:
+    n_rows, n_cols = dense.shape
+    indptr = [0]
+    indices: list[int] = []
+    data: list[float] = []
+    for r in range(n_rows):
+        nz = np.nonzero(dense[r])[0]
+        indices.extend(nz.tolist())
+        data.extend(dense[r, nz].tolist())
+        indptr.append(len(indices))
+    return CSRMatrix(
+        indptr=np.asarray(indptr, np.int64),
+        indices=np.asarray(indices, np.int32),
+        data=np.asarray(data, dense.dtype),
+        n_cols=n_cols,
+    )
+
+
+def csr_to_dense(m: CSRMatrix) -> np.ndarray:
+    out = np.zeros((m.n_rows, m.n_cols), dtype=m.data.dtype)
+    for r in range(m.n_rows):
+        lo, hi = m.indptr[r], m.indptr[r + 1]
+        out[r, m.indices[lo:hi]] = m.data[lo:hi]
+    return out
+
+
+def csr_to_ellpack(m: CSRMatrix, c: int, width: int | None = None) -> EllpackMatrix:
+    """Pad CSR to uniform-width slice-transposed ELLPACK with slice size c."""
+    lengths = m.row_lengths
+    w = int(width if width is not None else (lengths.max() if m.n_rows else 0))
+    w = max(w, 1)
+    n_slices = -(-m.n_rows // c)
+    cols = np.full((n_slices, w, c), PAD, np.int32)
+    vals = np.zeros((n_slices, w, c), m.data.dtype)
+    for r in range(m.n_rows):
+        lo, hi = m.indptr[r], m.indptr[r + 1]
+        k = min(hi - lo, w)
+        s, cc = divmod(r, c)
+        cols[s, :k, cc] = m.indices[lo : lo + k]
+        vals[s, :k, cc] = m.data[lo : lo + k]
+    return EllpackMatrix(cols=cols, vals=vals, n_rows=m.n_rows, n_cols=m.n_cols, nnz=m.nnz)
+
+
+def csr_to_sell(m: CSRMatrix, c: int, sigma: int | None = None) -> SellCSigmaMatrix:
+    """SELL-C-sigma conversion (sigma defaults to 8*c as in Gómez et al.)."""
+    sigma = sigma or 8 * c
+    lengths = m.row_lengths
+    order = np.arange(m.n_rows)
+    for lo in range(0, m.n_rows, sigma):
+        hi = min(lo + sigma, m.n_rows)
+        order[lo:hi] = lo + np.argsort(-lengths[lo:hi], kind="stable")
+    slice_cols, slice_vals = [], []
+    for lo in range(0, m.n_rows, c):
+        rows = order[lo : lo + c]
+        w = max(1, int(lengths[rows].max()))
+        cols = np.full((w, c), PAD, np.int32)
+        vals = np.zeros((w, c), m.data.dtype)
+        for j, r in enumerate(rows):
+            a, b = m.indptr[r], m.indptr[r + 1]
+            cols[: b - a, j] = m.indices[a:b]
+            vals[: b - a, j] = m.data[a:b]
+        slice_cols.append(cols)
+        slice_vals.append(vals)
+    return SellCSigmaMatrix(
+        slice_cols=tuple(slice_cols),
+        slice_vals=tuple(slice_vals),
+        perm=order,
+        n_rows=m.n_rows,
+        n_cols=m.n_cols,
+        nnz=m.nnz,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+
+def random_csr(
+    n_rows: int,
+    n_cols: int,
+    avg_nnz_row: float,
+    seed: int = 0,
+    dtype=np.float64,
+) -> CSRMatrix:
+    """Random sparse matrix with Poisson-ish row lengths."""
+    rng = np.random.default_rng(seed)
+    lengths = np.clip(rng.poisson(avg_nnz_row, n_rows), 1, n_cols)
+    indptr = np.zeros(n_rows + 1, np.int64)
+    np.cumsum(lengths, out=indptr[1:])
+    indices = np.empty(indptr[-1], np.int32)
+    for r in range(n_rows):
+        k = lengths[r]
+        indices[indptr[r] : indptr[r + 1]] = np.sort(
+            rng.choice(n_cols, size=k, replace=False)
+        )
+    data = rng.standard_normal(indptr[-1]).astype(dtype)
+    return CSRMatrix(indptr=indptr, indices=indices, data=data, n_cols=n_cols)
+
+
+def cage10_like(seed: int = 0, dtype=np.float64) -> CSRMatrix:
+    """CAGE10-shaped matrix (11,397 x 11,397, ~150,645 nnz, avg 13.2/row).
+
+    The SuiteSparse file is not bundled offline; this generator reproduces its
+    *structural statistics* (dimension, nnz, near-banded locality with random
+    off-band entries), which is what the memory-behavior study depends on.
+    """
+    n = 11_397
+    target_nnz = 150_645
+    avg = target_nnz / n            # ~13.2
+    rng = np.random.default_rng(seed)
+    lengths = np.clip(rng.poisson(avg - 1, n) + 1, 1, 33)  # cage10 max ~33
+    # Scale to hit the target nnz closely.
+    scale = (target_nnz - n) / max((lengths - 1).sum(), 1)
+    lengths = 1 + np.round((lengths - 1) * scale).astype(np.int64)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(lengths, out=indptr[1:])
+    indices = np.empty(indptr[-1], np.int32)
+    for r in range(n):
+        k = int(lengths[r])
+        # diagonal + banded locality (cage matrices are DNA-walk local)
+        band = rng.integers(max(0, r - 200), min(n, r + 201), size=max(k - 1, 0))
+        cand = np.unique(np.concatenate([[r], band]))
+        while len(cand) < k:  # top up with uniform entries
+            extra = rng.integers(0, n, size=k - len(cand))
+            cand = np.unique(np.concatenate([cand, extra]))
+        indices[indptr[r] : indptr[r + 1]] = np.sort(cand[:k]).astype(np.int32)
+    data = rng.standard_normal(indptr[-1]).astype(dtype)
+    return CSRMatrix(indptr=indptr, indices=indices, data=data, n_cols=n)

@@ -1,0 +1,13 @@
+"""Training stack: train-step builder (remat, grad-accum, compression),
+training loop with checkpoint/restart and straggler monitoring."""
+from repro.train.step import TrainConfig, TrainState, make_train_step, init_train_state
+from repro.train.loop import TrainLoopConfig, train_loop
+
+__all__ = [
+    "TrainConfig",
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+    "TrainLoopConfig",
+    "train_loop",
+]

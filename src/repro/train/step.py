@@ -1,0 +1,140 @@
+"""Train-step builder: loss, grad, microbatch accumulation, optimizer.
+
+One jitted function per run, assembled from config:
+
+* **remat** policy ("none" | "dots" | "full") threads into the scanned
+  blocks (compute/memory trade, chosen per arch x shape via SDV-style napkin
+  math — see EXPERIMENTS.md §Perf).
+* **grad accumulation**: ``accum_steps`` microbatches via ``lax.scan``; the
+  gradient psum happens ONCE per step (compute/comm overlap: each microbatch
+  overlaps its backward with the previous all-reduce under XLA's scheduler).
+* **int8 compression** (optional): quantize+error-feedback before the DP
+  reduce — see repro.optim.compression.
+* mixed precision: params f32, activations/backward in ``dtype`` (bf16 on
+  TPU), loss/softmax in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.layers import softmax_cross_entropy
+from repro.optim import (
+    AdamWConfig,
+    CompressionState,
+    adamw_init,
+    adamw_update,
+    compress_tree,
+    compression_init,
+    decompress_tree,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    remat: str | None = "dots"
+    accum_steps: int = 1
+    dtype: Any = jnp.bfloat16
+    aux_weight: float = 0.01       # MoE load-balance loss weight
+    compress_grads: bool = False
+    # store model params in this dtype with an f32 master copy in the
+    # optimizer state (halves the parameter HBM footprint at TP shards;
+    # None = f32 params, no master)
+    param_dtype: Any = None
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: dict
+    comp: CompressionState | None
+    step: jnp.ndarray
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+    params = M.init_params(key, cfg)
+    opt = adamw_init(params, keep_master=tcfg.param_dtype is not None)
+    if tcfg.param_dtype is not None:
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(tcfg.param_dtype), params
+        )
+    return TrainState(
+        params=params,
+        opt=opt,
+        comp=compression_init(params) if tcfg.compress_grads else None,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``batch``: {"tokens": (B, S), "labels": (B, S)} (+ ctx_embeds for
+    vlm/audio).  With accum_steps > 1, B must divide evenly; microbatches
+    are the leading split.
+    """
+
+    def loss_fn(params, micro):
+        logits, aux = M.forward(
+            params, cfg, micro, dtype=tcfg.dtype, remat=tcfg.remat
+        )
+        loss, n_tok = softmax_cross_entropy(logits, micro["labels"])
+        return loss + tcfg.aux_weight * aux, (loss, aux, n_tok)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def one_micro(params, micro):
+        (total, (loss, aux, _)), grads = grad_fn(params, micro)
+        return grads, loss, aux
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+        if tcfg.accum_steps <= 1:
+            grads, loss, aux = one_micro(params, batch)
+        else:
+            a = tcfg.accum_steps
+
+            def split(x):
+                return x.reshape((a, x.shape[0] // a) + x.shape[1:])
+
+            micros = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, micro):
+                g, l, x = one_micro(params, micro)
+                acc = jax.tree_util.tree_map(jnp.add, acc[0], g), acc[1] + l, acc[2] + x
+                return acc, None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum, xsum), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros(()), jnp.zeros(())), micros
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / a, gsum)
+            loss, aux = lsum / a, xsum / a
+
+        comp = state.comp
+        if tcfg.compress_grads and comp is not None:
+            q, scales, comp = compress_tree(grads, comp)
+            # NOTE: under jit+GSPMD the DP mean is implicit; the int8 tree is
+            # what would cross the pod links.  n_replicas=1 keeps semantics
+            # single-process; multi-process launchers pass the real count.
+            grads = decompress_tree(q, scales, n_replicas=1)
+
+        new_params, new_opt, om = adamw_update(
+            grads, state.opt, params, tcfg.optimizer
+        )
+        metrics = {
+            "loss": loss,
+            "aux": aux,
+            "grad_norm": om["grad_norm"],
+            "lr": om["lr"],
+        }
+        return TrainState(new_params, new_opt, comp, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,195 @@
+"""Fault-tolerance tests: checkpoint integrity, crash/restart resume,
+straggler detection, elastic re-mesh planning, restart supervision."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.runtime import StepMonitor, plan_mesh, run_with_restarts
+from repro.runtime.supervisor import RestartBudgetExceeded
+from repro.train import TrainConfig, TrainLoopConfig, train_loop
+
+RNG = np.random.default_rng(5)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint store
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.asarray(RNG.standard_normal((8, 4)), jnp.float32)},
+        "opt": {"m": jnp.zeros((8, 4)), "step": jnp.asarray(3, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip_exact(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 7, tree, extra={"data": {"step": 7}})
+    got, extra, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 7 and extra == {"data": {"step": 7}}
+    for a, b in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_latest_selection(tmp_path):
+    tree = _tree()
+    for s in (5, 20, 10):
+        save_checkpoint(str(tmp_path), s, tree)
+    assert latest_step(str(tmp_path)) == 20
+    _, _, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 20
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = _tree()
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    # flip bytes in the arrays file
+    arrs = os.path.join(path, "arrays.npz")
+    blob = bytearray(open(arrs, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(arrs, "wb").write(bytes(blob))
+    with pytest.raises(Exception):
+        restore_checkpoint(str(tmp_path), tree)
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, tree)
+    mgr.wait()
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+    )
+    assert steps == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# Crash / restart end-to-end
+# ---------------------------------------------------------------------------
+
+
+def _loop_cfgs(tmp_path, total=12):
+    cfg = configs.reduced_config("qwen2-1.5b")
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3), remat=None,
+                       dtype=jnp.float32)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    lcfg = TrainLoopConfig(total_steps=total, ckpt_every=4,
+                           ckpt_dir=str(tmp_path), log_every=100)
+    return cfg, tcfg, dcfg, lcfg
+
+
+def test_crash_restart_resumes_identically(tmp_path):
+    """Crash at step 9, restart, and the final state must equal an
+    uninterrupted run (exact resume: checkpoint + deterministic data)."""
+    cfg, tcfg, dcfg, lcfg = _loop_cfgs(tmp_path / "a")
+    quiet = lambda s: None
+    # uninterrupted reference
+    ref_state, _ = train_loop(cfg, tcfg, dcfg, lcfg, log=quiet)
+
+    cfg2, tcfg2, dcfg2, lcfg2 = _loop_cfgs(tmp_path / "b")
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train_loop(cfg2, tcfg2, dcfg2, lcfg2, log=quiet, fail_at_step=9)
+    # restart resumes from step 8 checkpoint
+    resumed, _ = train_loop(cfg2, tcfg2, dcfg2, lcfg2, log=quiet)
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32)).max()),
+        ref_state.params, resumed.params,
+    )
+    worst = max(jax.tree_util.tree_leaves(d))
+    assert worst < 1e-6, f"resume diverged by {worst}"
+
+
+def test_supervisor_restarts_until_success(tmp_path):
+    cfg, tcfg, dcfg, lcfg = _loop_cfgs(tmp_path, total=8)
+    quiet = lambda s: None
+    attempts = {"n": 0}
+
+    def job():
+        attempts["n"] += 1
+        # first attempt crashes mid-run; the second must resume and finish
+        fail = 6 if attempts["n"] == 1 else None
+        return train_loop(cfg, tcfg, dcfg, lcfg, log=quiet, fail_at_step=fail)
+
+    (state, hist), restarts = run_with_restarts(job, max_restarts=2)
+    assert restarts == 1
+    assert int(state.step) == 8
+
+
+def test_supervisor_gives_up():
+    def job():
+        raise RuntimeError("always broken")
+
+    with pytest.raises(RestartBudgetExceeded):
+        run_with_restarts(job, max_restarts=2)
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_detection():
+    mon = StepMonitor(threshold=3.0, warmup=2)
+    for step in range(20):
+        mon.record(step, 0.1)
+    ev = mon.record(20, 0.9)
+    assert ev is not None and ev.slowdown == pytest.approx(9.0, rel=0.01)
+    assert len(mon.straggler_events) == 1
+    # normal step afterwards: no event
+    assert mon.record(21, 0.1) is None
+
+
+def test_straggler_warmup_excluded():
+    mon = StepMonitor(threshold=3.0, warmup=3)
+    # huge compile-time first steps must not trigger
+    assert mon.record(0, 60.0) is None
+    assert mon.record(1, 50.0) is None
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-mesh
+# ---------------------------------------------------------------------------
+
+
+def test_plan_mesh_full_pod():
+    plan = plan_mesh(256, preferred_model=16, global_batch=256)
+    assert plan.shape == (16, 16)
+    assert plan.accum_steps == 1
+
+
+def test_plan_mesh_after_node_loss():
+    """240 devices (one host of 16 lost): keep TP=16, data=15; batch 256 has
+    no factor 15 under any accumulation -> the plan rescales the batch."""
+    plan = plan_mesh(240, preferred_model=16, global_batch=256)
+    assert plan.shape[1] == 16
+    assert plan.shape[0] * plan.shape[1] == 240
+    assert (plan.global_batch // plan.accum_steps) % plan.shape[0] == 0
+    assert abs(plan.global_batch - 256) <= plan.shape[0]
+
+
+def test_plan_mesh_degrades_model_axis():
+    """24 devices can't host TP=16 -> fall back to a smaller TP."""
+    plan = plan_mesh(24, preferred_model=16, global_batch=256)
+    assert plan.n_devices == 24
+    assert plan.shape[1] in (8, 4, 2, 1)
+    assert (plan.global_batch // plan.accum_steps) % plan.shape[0] == 0
+
+
+def test_plan_mesh_scales_up():
+    plan = plan_mesh(1024, preferred_model=16, global_batch=256)
+    assert plan.shape == (64, 16)

@@ -1,0 +1,311 @@
+"""Per-kernel Pallas validation: shape/dtype sweeps vs the ref.py oracles.
+
+Every kernel runs in interpret mode (CPU container; TPU is the target) and
+must match its pure-jnp oracle to fp tolerance, across vector lengths,
+block shapes and dtypes — including the vsetvl-style ragged tails.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.graphs import gen as G
+from repro.kernels import bfs as bfs_k
+from repro.kernels import ops, ref
+from repro.kernels import pagerank as pr_k
+from repro.sparse import formats as F
+
+RNG = np.random.default_rng(1234)
+
+
+# ---------------------------------------------------------------------------
+# SpMV
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vl", [8, 32, 128])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_spmv_matches_oracle(vl, dtype):
+    m = F.random_csr(300, 280, 6.0, seed=vl, dtype=dtype)
+    ell = F.csr_to_ellpack(m, c=vl)
+    x = RNG.standard_normal(280).astype(dtype)
+    got = ops.spmv(ell, x, vl=vl)
+    want = ref.spmv_ref(
+        jnp.asarray(ell.cols), jnp.asarray(ell.vals), jnp.asarray(x), m.n_rows
+    )
+    rtol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=1e-5)
+
+
+@pytest.mark.parametrize("w_block", [1, 4, 16])
+def test_spmv_w_blocking_invariant(w_block):
+    """Accumulating over W tiles must not change the result."""
+    m = F.random_csr(200, 200, 9.0, seed=7)
+    ell = F.csr_to_ellpack(m, c=64)
+    x = RNG.standard_normal(200)
+    base = ops.spmv(ell, x, vl=64, w_block=8)
+    got = ops.spmv(ell, x, vl=64, w_block=w_block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-12)
+
+
+@given(
+    n_rows=st.integers(min_value=1, max_value=150),
+    avg=st.floats(min_value=1.0, max_value=8.0),
+    vl=st.sampled_from([8, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+@settings(max_examples=15, deadline=None)
+def test_spmv_property_vs_csr(n_rows, avg, vl, seed):
+    """Kernel result == direct CSR matvec for arbitrary shapes (ragged tail)."""
+    m = F.random_csr(n_rows, n_rows + 3, avg, seed=seed)
+    x = np.random.default_rng(seed).standard_normal(n_rows + 3)
+    got = np.asarray(ops.spmv(m, x, vl=vl))
+    want = m.matvec(x)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_spmv_cage10_like_shape():
+    """The paper's input: CAGE10 statistics."""
+    m = F.cage10_like(seed=0)
+    assert m.n_rows == 11_397
+    assert abs(m.nnz - 150_645) / 150_645 < 0.02
+    ell = F.csr_to_ellpack(m, c=256)
+    x = RNG.standard_normal(m.n_cols)
+    got = np.asarray(ops.spmv(ell, x, vl=256))
+    want = np.asarray(
+        ref.spmv_ref(jnp.asarray(ell.cols), jnp.asarray(ell.vals), jnp.asarray(x), m.n_rows)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# FFT
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 64, 512, 2048])
+def test_fft_matches_numpy(n):
+    sig = RNG.standard_normal((4, n)) + 1j * RNG.standard_normal((4, n))
+    fr, fi = ops.fft(sig.real, sig.imag, b_block=2)
+    want = np.fft.fft(sig)
+    np.testing.assert_allclose(np.asarray(fr), want.real, rtol=1e-9, atol=1e-9 * n)
+    np.testing.assert_allclose(np.asarray(fi), want.imag, rtol=1e-9, atol=1e-9 * n)
+
+
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 1e-3), (np.float64, 1e-9)])
+def test_fft_dtypes(dtype, tol):
+    n = 256
+    sig = RNG.standard_normal((3, n)).astype(dtype)
+    fr, fi = ops.fft(sig)
+    want = np.fft.fft(sig)
+    np.testing.assert_allclose(np.asarray(fr), want.real.astype(dtype), rtol=tol, atol=tol * n)
+
+
+@pytest.mark.parametrize("batch,b_block", [(1, 8), (3, 2), (8, 8), (13, 4)])
+def test_fft_batch_tails(batch, b_block):
+    """Batch padding (the vsetvl tail on the batch axis) must be exact."""
+    n = 128
+    sig = RNG.standard_normal((batch, n))
+    fr, fi = ops.fft(sig, b_block=b_block)
+    assert fr.shape == (batch, n)
+    want = np.fft.fft(sig)
+    np.testing.assert_allclose(np.asarray(fr), want.real, rtol=1e-9, atol=1e-9 * n)
+
+
+@given(logn=st.integers(min_value=2, max_value=9), seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_fft_parseval_and_linearity(logn, seed):
+    """Property: Parseval's identity and linearity of the kernel FFT."""
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((2, n))
+    fr, fi = ops.fft(a)
+    power_time = (a**2).sum(axis=1)
+    power_freq = (np.asarray(fr) ** 2 + np.asarray(fi) ** 2).sum(axis=1) / n
+    np.testing.assert_allclose(power_freq, power_time, rtol=1e-8)
+    # linearity: fft(a0 + 2*a1) == fft(a0) + 2*fft(a1)
+    fr2, fi2 = ops.fft(a[0] + 2 * a[1])
+    np.testing.assert_allclose(
+        np.asarray(fr2)[0], np.asarray(fr)[0] + 2 * np.asarray(fr)[1], rtol=1e-7, atol=1e-8 * n
+    )
+
+
+def test_fft_paper_size_2048():
+    """The paper's FFT: 2048 points."""
+    sig = RNG.standard_normal(2048)
+    fr, fi = ops.fft(sig)
+    want = np.fft.fft(sig)
+    np.testing.assert_allclose(np.asarray(fr)[0], want.real, rtol=1e-8, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# BFS
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vl", [32, 128])
+def test_bfs_matches_reference(vl):
+    g = G.random_graph(n_nodes=384, avg_degree=4, seed=vl)
+    want = G.bfs_reference(g, 0)
+    got = ops.bfs(g, 0, vl=vl)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bfs_rmat_skewed():
+    g = G.rmat_graph(n_nodes=256, avg_degree=6, seed=9)
+    want = G.bfs_reference(g, 1)
+    got = ops.bfs(g, 1, vl=64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bfs_unreachable_stay_inf():
+    adj = np.full((8, 2), -1, np.int32)
+    adj[0, 0] = 1  # 0 -> 1 only
+    g = G.EllpackGraph(adj=adj, n_nodes=8)
+    got = ops.bfs(g, 0, vl=8)
+    assert got[0] == 0 and got[1] == 1
+    assert all(got[i] == ref.INF for i in range(2, 8))
+
+
+@given(
+    n=st.integers(min_value=9, max_value=120),
+    deg=st.integers(min_value=1, max_value=6),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=10, deadline=None)
+def test_bfs_property_vs_reference(n, deg, seed):
+    g = G.random_graph(n_nodes=n, avg_degree=deg, seed=seed)
+    want = G.bfs_reference(g, seed % n)
+    got = ops.bfs(g, seed % n, vl=8)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bfs_step_kernel_matches_ref_step():
+    g = G.random_graph(n_nodes=128, avg_degree=4, seed=3)
+    radj = jnp.asarray(g.transpose().adj)
+    dist = jnp.full((128,), ref.INF, jnp.int32).at[0].set(0)
+    for level in (1, 2):
+        want = ref.bfs_step_ref(radj, dist, level)
+        got = bfs_k.bfs_step(radj, dist, jnp.array([level], jnp.int32), vl=32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        dist = want
+
+
+# ---------------------------------------------------------------------------
+# PageRank
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vl", [32, 128])
+def test_pagerank_matches_reference(vl):
+    g = G.random_graph(n_nodes=320, avg_degree=5, seed=vl)
+    want = G.pagerank_reference(g, iters=12)
+    got = ops.pagerank(g, iters=12, vl=vl)
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+def test_pagerank_mass_conserved():
+    g = G.rmat_graph(n_nodes=512, avg_degree=8, seed=2)
+    got = ops.pagerank(g, iters=15, vl=128)
+    assert got.sum() == pytest.approx(1.0, rel=1e-9)
+    assert (got > 0).all()
+
+
+def test_pagerank_step_kernel_matches_ref_step():
+    g = G.random_graph(n_nodes=64, avg_degree=4, seed=5)
+    rt = jnp.asarray(g.transpose().adj)
+    contrib = jnp.asarray(RNG.random(64))
+    consts = jnp.asarray([0.15 / 64, 0.85, 0.001])
+    want = ref.pagerank_step_ref(rt, contrib, 0.85, jnp.asarray(0.001 * 64), 64)
+    got = pr_k.pagerank_step(rt, contrib, consts, vl=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=8, deadline=None)
+def test_pagerank_property_sums_to_one(seed):
+    g = G.random_graph(n_nodes=96, avg_degree=3, seed=seed)
+    got = ops.pagerank(g, iters=10, vl=32)
+    assert abs(got.sum() - 1.0) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Embedding gather (beyond-paper: the paper's gather class on the LM substrate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vl", [8, 64, 256])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_embedding_gather_matches_take(vl, dtype):
+    from repro.kernels.gather import embedding_gather, embedding_gather_ref
+
+    table = jnp.asarray(RNG.standard_normal((500, 32)).astype(dtype))
+    ids = jnp.asarray(RNG.integers(0, 500, (300,)), jnp.int32)
+    got = embedding_gather(table, ids, vl=vl)
+    want = embedding_gather_ref(table, ids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    t=st.integers(min_value=1, max_value=200),
+    v=st.integers(min_value=2, max_value=300),
+    vl=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=10, deadline=None)
+def test_embedding_gather_property(t, v, vl, seed):
+    from repro.kernels.gather import embedding_gather
+
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((v, 16)))
+    ids = jnp.asarray(rng.integers(0, v, (t,)), jnp.int32)
+    got = embedding_gather(table, ids, vl=vl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(table[ids]))
+
+
+# ---------------------------------------------------------------------------
+# Fused SSD kernel (beyond-paper: mamba2's hot-spot fused in VMEM)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 2e-4), (np.float64, 1e-10)])
+def test_ssd_fused_matches_recurrence(chunk, dtype, tol):
+    from repro.kernels.ssd import ssd_fused
+    from repro.models.ssm import ssd_reference
+
+    rng = np.random.default_rng(chunk)
+    b, l, h, p, g, n = 2, 64, 4, 8, 2, 16
+    xd = jnp.asarray(rng.standard_normal((b, l, h, p)).astype(dtype))
+    ad = jnp.asarray((-np.abs(rng.standard_normal((b, l, h))) * 0.3).astype(dtype))
+    B = jnp.asarray(rng.standard_normal((b, l, g, n)).astype(dtype))
+    C = jnp.asarray(rng.standard_normal((b, l, g, n)).astype(dtype))
+    y1, f1 = ssd_fused(xd, ad, B, C, chunk=chunk)
+    y0, f0 = ssd_reference(xd, ad, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f0), atol=tol, rtol=tol)
+
+
+@given(
+    logl=st.integers(min_value=3, max_value=6),
+    chunk=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=8, deadline=None)
+def test_ssd_fused_property(logl, chunk, seed):
+    from repro.kernels.ssd import ssd_fused
+    from repro.models.ssm import ssd_reference
+
+    l = 1 << logl
+    rng = np.random.default_rng(seed)
+    b, h, p, n = 1, 2, 4, 8
+    xd = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    ad = jnp.asarray(-np.abs(rng.standard_normal((b, l, h))) * 0.5, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, l, 1, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, l, 1, n)), jnp.float32)
+    y1, f1 = ssd_fused(xd, ad, B, C, chunk=chunk)
+    y0, f0 = ssd_reference(xd, ad, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f0), atol=3e-4)

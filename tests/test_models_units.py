@@ -1,0 +1,291 @@
+"""Unit tests for model components: SSD, ring-buffer KV cache, MoE dispatch,
+RoPE, sliding windows, cross-entropy."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as moe_mod
+from repro.models import ssm as S
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+from repro.models.layers import rms_norm, softmax_cross_entropy
+
+RNG = np.random.default_rng(7)
+
+
+def _mk(x, dt=jnp.float32):
+    return jnp.asarray(x, dt)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 8, 16])
+@pytest.mark.parametrize("groups", [1, 2])
+def test_ssd_chunked_equals_recurrence(chunk, groups):
+    b, l, h, p, n = 2, 16, 4, 8, 8
+    xd = _mk(RNG.standard_normal((b, l, h, p)))
+    ad = _mk(-np.abs(RNG.standard_normal((b, l, h))) * 0.5)
+    B = _mk(RNG.standard_normal((b, l, groups, n)))
+    C = _mk(RNG.standard_normal((b, l, groups, n)))
+    init = _mk(RNG.standard_normal((b, h, p, n)))
+    y1, f1 = S.ssd_chunked(xd, ad, B, C, chunk, init)
+    y0, f0 = S.ssd_reference(xd, ad, B, C, init)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f0), atol=1e-4)
+
+
+def test_ssd_chunk_boundary_state_handoff():
+    """Running two half-sequences with state handoff == one full pass."""
+    b, l, h, p, n = 1, 16, 2, 4, 8
+    xd = _mk(RNG.standard_normal((b, l, h, p)))
+    ad = _mk(-np.abs(RNG.standard_normal((b, l, h))) * 0.3)
+    B = _mk(RNG.standard_normal((b, l, 1, n)))
+    C = _mk(RNG.standard_normal((b, l, 1, n)))
+    y_full, f_full = S.ssd_chunked(xd, ad, B, C, 8, None)
+    y1, f1 = S.ssd_chunked(xd[:, :8], ad[:, :8], B[:, :8], C[:, :8], 8, None)
+    y2, f2 = S.ssd_chunked(xd[:, 8:], ad[:, 8:], B[:, 8:], C[:, 8:], 8, f1)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), atol=1e-5
+    )
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f_full), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+
+def _dense_cfg(window=None):
+    return ModelConfig(
+        name="t", family="dense", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8, sliding_window=window,
+    )
+
+
+def test_cache_append_and_wrap():
+    cfg = _dense_cfg(window=4)
+    cache = A.init_cache(cfg, batch=1, max_len=16, dtype=jnp.float32)
+    assert cache.k.shape[1] == 4  # capacity = window
+    for t in range(7):
+        k = _mk(RNG.standard_normal((1, 1, 2, 8)))
+        cache = A.cache_append(cache, k, k)
+    assert int(cache.length) == 7
+    # slots hold positions 3..6 (last `window` tokens)
+    assert sorted(np.asarray(cache.pos).tolist()) == [3, 4, 5, 6]
+
+
+def test_cache_bulk_append_exceeding_capacity():
+    cfg = _dense_cfg(window=4)
+    cache = A.init_cache(cfg, batch=1, max_len=16, dtype=jnp.float32)
+    k = _mk(RNG.standard_normal((1, 10, 2, 8)))
+    cache = A.cache_append(cache, k, k)
+    assert int(cache.length) == 10
+    assert sorted(np.asarray(cache.pos).tolist()) == [6, 7, 8, 9]
+    # slot layout must respect pos % cap
+    for slot, pos in enumerate(np.asarray(cache.pos)):
+        assert pos % 4 == slot
+
+
+def test_swa_decode_equals_full_recompute():
+    """Sliding-window decode through the ring == windowed attention over the
+    full sequence (the long_500k mechanism)."""
+    cfg = _dense_cfg(window=4)
+    key = jax.random.PRNGKey(3)
+    p = A.init_attn_params(key, cfg)
+    s = 10
+    x = _mk(RNG.standard_normal((1, s, 32)))
+    full, _ = A.attention(p, cfg, x)
+    cache = A.init_cache(cfg, 1, max_len=s, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        o, cache = A.attention(p, cfg, x[:, t : t + 1], cache=cache)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg(cf=4.0):
+    return ModelConfig(
+        name="m", family="moe", n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+        d_ff=32, vocab_size=64, head_dim=8,
+        moe=MoEConfig(n_experts=4, top_k=2, n_shared=1, capacity_factor=cf),
+    )
+
+
+def test_moe_no_drop_matches_dense_computation():
+    """With no drops, capacity dispatch == explicit per-token expert mix."""
+    cfg = _moe_cfg(cf=4.0)
+    p = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = _mk(RNG.standard_normal((2, 8, 16)))
+    out, aux = moe_mod.moe_forward(p, cfg, x)
+
+    # reference: route each token independently (no capacity)
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    w, idx = jax.lax.top_k(probs, 2)
+    w = w / w.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(x)
+    for e in range(4):
+        h = jax.nn.silu(x @ p["experts_gate"][e]) * (x @ p["experts_up"][e])
+        eout = h @ p["experts_down"][e]
+        we = ((idx == e) * w).sum(-1)[..., None]
+        ref = ref + we * eout
+    sh = p["shared"]
+    ref = ref + (jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])) @ sh["w_down"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor << 1 some assignments must drop (output != no-drop)."""
+    cfg_lo = _moe_cfg(cf=0.3)
+    cfg_hi = _moe_cfg(cf=4.0)
+    p = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg_lo)
+    x = _mk(RNG.standard_normal((1, 32, 16)))
+    out_lo, _ = moe_mod.moe_forward(p, cfg_lo, x)
+    out_hi, _ = moe_mod.moe_forward(p, cfg_hi, x)
+    assert float(jnp.abs(out_lo - out_hi).max()) > 1e-6
+
+
+def test_moe_aux_loss_balanced_routing_is_lower():
+    """Uniform routing minimizes the load-balance loss (= 1 at optimum)."""
+    cfg = _moe_cfg()
+    p = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = _mk(RNG.standard_normal((1, 64, 16)))
+    _, aux = moe_mod.moe_forward(p, cfg, x)
+    # skewed router: positive inputs + one dominant column -> everything
+    # lands on expert 0
+    p_skew = dict(p)
+    p_skew["router"] = jnp.full_like(p["router"], -1.0).at[:, 0].set(1.0)
+    x_pos = jnp.abs(x) + 0.1
+    _, aux_skew = moe_mod.moe_forward(p_skew, cfg, x_pos)
+    assert float(aux_skew) > 1.5 > float(aux) >= 0.9
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def test_rms_norm_scale_and_dtype():
+    x = _mk(RNG.standard_normal((2, 3, 8)), jnp.bfloat16)
+    y = rms_norm(x, jnp.ones((8,)))
+    assert y.dtype == jnp.bfloat16
+    yf = np.asarray(y.astype(jnp.float32))
+    rms = np.sqrt((yf**2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, atol=0.05)
+
+
+def test_cross_entropy_matches_manual():
+    logits = _mk(RNG.standard_normal((2, 5, 11)))
+    labels = jnp.asarray(RNG.integers(0, 11, (2, 5)))
+    loss, n = softmax_cross_entropy(logits, labels)
+    man = -jax.nn.log_softmax(logits, -1)
+    man = np.asarray(
+        jnp.take_along_axis(man, labels[..., None], -1)[..., 0]
+    ).mean()
+    assert float(loss) == pytest.approx(man, rel=1e-6)
+    assert int(n) == 10
+
+
+def test_cross_entropy_ignores_masked():
+    logits = _mk(RNG.standard_normal((1, 4, 7)))
+    labels = jnp.asarray([[1, 2, -1, -1]])
+    loss, n = softmax_cross_entropy(logits, labels)
+    assert int(n) == 2
+    loss2, _ = softmax_cross_entropy(logits[:, :2], labels[:, :2])
+    assert float(loss) == pytest.approx(float(loss2), rel=1e-6)
+
+
+def test_qk_norm_and_bias_paths():
+    cfg = ModelConfig(
+        name="q", family="dense", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8,
+        qk_norm=True, qkv_bias=True,
+    )
+    p = A.init_attn_params(jax.random.PRNGKey(0), cfg)
+    assert "q_norm" in p and "bq" in p
+    x = _mk(RNG.standard_normal((2, 6, 32)))
+    out, _ = A.attention(p, cfg, x)
+    assert out.shape == (2, 6, 32)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_attn_bf16_scores_close_to_f32():
+    """The attnbf16 perf flag must stay within bf16 tolerance of f32 SDPA."""
+    cfg = _dense_cfg()
+    p = A.init_attn_params(jax.random.PRNGKey(1), cfg)
+    x = _mk(RNG.standard_normal((2, 32, 32)), jnp.bfloat16)
+    base, _ = A.attention(p, cfg, x)
+    A.ATTN_BF16_SCORES = True
+    try:
+        fast, _ = A.attention(p, cfg, x)
+    finally:
+        A.ATTN_BF16_SCORES = False
+    diff = jnp.abs(base.astype(jnp.float32) - fast.astype(jnp.float32)).max()
+    scale = jnp.abs(base.astype(jnp.float32)).max()
+    assert float(diff) <= 0.05 * float(scale) + 1e-3
+
+
+def test_seq_shard_flag_noop_without_mesh():
+    """Perf flags must be inert on a single device (no mesh)."""
+    cfg = _dense_cfg()
+    p = A.init_attn_params(jax.random.PRNGKey(1), cfg)
+    x = _mk(RNG.standard_normal((1, 16, 32)))
+    base, _ = A.attention(p, cfg, x)
+    A.SEQ_SHARD_FALLBACK = True
+    try:
+        same, _ = A.attention(p, cfg, x)
+    finally:
+        A.SEQ_SHARD_FALLBACK = False
+    np.testing.assert_allclose(np.asarray(base), np.asarray(same), rtol=1e-6)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_chunked_attention_matches_full(window, chunk):
+    """Flash-style online-softmax attention == full materialization."""
+    cfg = ModelConfig(
+        name="t", family="dense", n_layers=1, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab_size=64, head_dim=16,
+        sliding_window=window,
+    )
+    p = A.init_attn_params(jax.random.PRNGKey(0), cfg)
+    x = _mk(RNG.standard_normal((2, 64, 64)))
+    base, _ = A.attention(p, cfg, x)
+    A.ATTN_KV_CHUNK = chunk
+    try:
+        fast, _ = A.attention(p, cfg, x)
+    finally:
+        A.ATTN_KV_CHUNK = 0
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(base), atol=3e-6)
+
+
+def test_chunked_attention_grads_match():
+    """Backward through the online-softmax scan == backward through full."""
+    cfg = _dense_cfg()
+    p = A.init_attn_params(jax.random.PRNGKey(2), cfg)
+    x = _mk(RNG.standard_normal((1, 32, 32)))
+
+    def loss(params, flag):
+        A.ATTN_KV_CHUNK = 8 if flag else 0
+        try:
+            out, _ = A.attention(params, cfg, x)
+        finally:
+            A.ATTN_KV_CHUNK = 0
+        return jnp.sum(out**2)
+
+    g0 = jax.grad(lambda q: loss(q, False))(p)
+    g1 = jax.grad(lambda q: loss(q, True))(p)
+    for a, b in zip(jax.tree_util.tree_leaves(g0), jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=2e-4)

@@ -1,0 +1,176 @@
+"""Tests of the SDV machine model against the paper's claims (§4).
+
+These are the reproduction's validation gates: the two headline claims
+(latency tolerance grows with VL; bandwidth exploitation grows with VL) must
+hold over the full sweep grid, and the model must hit the paper's quoted
+SpMV slowdown cells within tolerance.
+"""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import sdv, sweep, traffic
+from repro.core.autotune import tune_vl
+from repro.core.sdv import MachineParams, SDVMachine
+from repro.core.vconfig import PAPER_VLS, SCALAR_VL, VectorConfig
+
+KERNELS = sweep.KERNELS
+
+
+@pytest.fixture(scope="module")
+def latency_tables():
+    return sweep.slowdown_tables(sweep.latency_sweep())
+
+
+@pytest.fixture(scope="module")
+def bandwidth_result():
+    return sweep.bandwidth_sweep()
+
+
+# ---------------------------------------------------------------------------
+# Paper claims
+# ---------------------------------------------------------------------------
+
+
+def test_claim_latency_tolerance(latency_tables):
+    """Fig 4: slowdown non-increasing in VL for every added-latency row."""
+    violations = sweep.check_latency_claim(latency_tables)
+    assert not violations, violations
+
+
+def test_claim_bandwidth_exploitation(bandwidth_result):
+    """Fig 5: plateau bandwidth non-decreasing in VL; scalar plateaus early."""
+    violations = sweep.check_bandwidth_claim(bandwidth_result)
+    assert not violations, violations
+
+
+def test_spmv_anchor_cells(latency_tables):
+    """The paper quotes SpMV slowdowns: scalar 1.22x/8.78x and vl256
+    1.05x/3.39x at +32/+1024 cycles.  Model must be within 10%."""
+    errors = sweep.spmv_anchor_errors(latency_tables)
+    for cell, err in errors.items():
+        assert err < 0.10, f"anchor {cell} off by {err:.1%}"
+
+
+def test_vector_beats_scalar_absolute():
+    """Long vectors must be faster in absolute cycles too, for every kernel."""
+    for kernel in KERNELS:
+        build = traffic.TRACE_BUILDERS[kernel]
+        machine = SDVMachine(MachineParams())
+        scalar = machine.run(build(VectorConfig(vl=SCALAR_VL))).cycles
+        vec = machine.run(build(VectorConfig(vl=256))).cycles
+        assert vec < scalar / 4, f"{kernel}: vl256 {vec} vs scalar {scalar}"
+
+
+def test_slowdown_tables_normalized(latency_tables):
+    for kernel in KERNELS:
+        for vl, curve in latency_tables[kernel].items():
+            assert curve[0] == pytest.approx(1.0)
+            assert all(v >= 0.999 for v in curve.values())
+
+
+# ---------------------------------------------------------------------------
+# Model properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    extra=st.integers(min_value=0, max_value=4096),
+    delta=st.integers(min_value=1, max_value=512),
+    vl=st.sampled_from((SCALAR_VL,) + PAPER_VLS),
+    kernel=st.sampled_from(KERNELS),
+)
+@settings(max_examples=60, deadline=None)
+def test_monotone_in_latency(extra, delta, vl, kernel):
+    """More memory latency never makes a run faster."""
+    build = traffic.TRACE_BUILDERS[kernel]
+    trace = build(VectorConfig(vl=vl))
+    base = MachineParams()
+    t0 = SDVMachine(base.with_latency(extra)).run(trace).cycles
+    t1 = SDVMachine(base.with_latency(extra + delta)).run(trace).cycles
+    assert t1 >= t0 * 0.999
+
+
+@given(
+    bw=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    vl=st.sampled_from((SCALAR_VL,) + PAPER_VLS),
+    kernel=st.sampled_from(KERNELS),
+)
+@settings(max_examples=40, deadline=None)
+def test_monotone_in_bandwidth(bw, vl, kernel):
+    """More bandwidth never makes a run slower."""
+    build = traffic.TRACE_BUILDERS[kernel]
+    trace = build(VectorConfig(vl=vl))
+    base = MachineParams()
+    t_lo = SDVMachine(base.with_bandwidth(bw)).run(trace).cycles
+    t_hi = SDVMachine(base.with_bandwidth(2 * bw)).run(trace).cycles
+    assert t_hi <= t_lo * 1.001
+
+
+@given(vl=st.sampled_from(PAPER_VLS), kernel=st.sampled_from(KERNELS))
+@settings(max_examples=30, deadline=None)
+def test_fewer_instructions_with_longer_vectors(vl, kernel):
+    """The mechanism: instruction count scales ~1/VL (the 'short reason')."""
+    build = traffic.TRACE_BUILDERS[kernel]
+    machine = SDVMachine(MachineParams())
+    n_long = machine.run(build(VectorConfig(vl=vl))).mem_instructions
+    n_scalar = machine.run(build(VectorConfig(vl=SCALAR_VL))).mem_instructions
+    assert n_long < n_scalar
+    # within 4x of the ideal 1/VL scaling (padding + phase structure differ)
+    assert n_long < 4 * n_scalar / vl
+
+
+def test_bandwidth_limiter_fraction_interface():
+    """§2.3: num/den window registers (1/3 -> 33% of peak)."""
+    m = MachineParams().with_bandwidth_fraction(1, 3)
+    assert m.eff_bw == pytest.approx(64.0 / 3.0)
+    m2 = MachineParams().with_bandwidth_fraction(1, 1)
+    assert m2.eff_bw == pytest.approx(64.0)
+
+
+def test_latency_controller_is_dynamic():
+    """§2.2: latency reprogrammable without touching anything else."""
+    m = MachineParams()
+    assert m.with_latency(100).mem_latency == 150
+    assert m.with_latency(100).with_latency(0).mem_latency == 50
+    assert m.with_latency(100).eff_bw == m.eff_bw
+
+
+# ---------------------------------------------------------------------------
+# Co-design autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_prefers_long_vectors_on_fpga_sdv():
+    """On the paper's machine, modeled-best VL should be the longest one for
+    the memory-bound kernels — the paper's central recommendation."""
+    for kernel in ("spmv", "pagerank"):
+        res = tune_vl(
+            traffic.TRACE_BUILDERS[kernel],
+            machine=MachineParams(extra_latency=256),
+            candidates=list(PAPER_VLS),
+        )
+        assert res.vl >= 128, f"{kernel} tuned to vl={res.vl}"
+        assert res.speedup_over_worst() > 1.5
+
+
+def test_autotune_respects_vmem_budget():
+    res = tune_vl(
+        traffic.TRACE_BUILDERS["spmv"],
+        machine=MachineParams(),
+        candidates=[8, 16, 32, 64],
+        bytes_per_vl_row=1024.0,
+        vmem_budget=32 * 1024.0,
+    )
+    assert res.vl <= 32
+
+
+def test_trace_meta_and_breakdown():
+    trace = traffic.TRACE_BUILDERS["spmv"](VectorConfig(vl=64))
+    run = SDVMachine(MachineParams()).run(trace)
+    bd = run.breakdown()
+    assert set(bd) == {"transfer", "compute", "exposure"}
+    assert run.cycles > 0 and run.dram_bytes > 0
+    assert math.isfinite(run.cycles)

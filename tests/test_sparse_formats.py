@@ -1,0 +1,90 @@
+"""Property tests for the sparse/graph substrates."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graphs import gen as G
+from repro.sparse import formats as F
+
+
+@given(
+    n=st.integers(min_value=1, max_value=60),
+    m=st.integers(min_value=1, max_value=60),
+    density=st.floats(min_value=0.02, max_value=0.5),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_csr_dense_roundtrip(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal((n, m)) * (rng.random((n, m)) < density)
+    csr = F.csr_from_dense(dense)
+    np.testing.assert_array_equal(F.csr_to_dense(csr), dense)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=80),
+    avg=st.floats(min_value=1.0, max_value=6.0),
+    c=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_ellpack_matvec_matches_csr(n, avg, c, seed):
+    csr = F.random_csr(n, n, avg, seed=seed)
+    ell = F.csr_to_ellpack(csr, c=c)
+    x = np.random.default_rng(seed).standard_normal(n)
+    np.testing.assert_allclose(ell.matvec(x), csr.matvec(x), rtol=1e-12, atol=1e-12)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=80),
+    avg=st.floats(min_value=1.0, max_value=6.0),
+    c=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_sell_matvec_matches_csr(n, avg, c, seed):
+    csr = F.random_csr(n, n, avg, seed=seed)
+    sell = F.csr_to_sell(csr, c=c, sigma=4 * c)
+    x = np.random.default_rng(seed).standard_normal(n)
+    np.testing.assert_allclose(sell.matvec(x), csr.matvec(x), rtol=1e-12, atol=1e-12)
+
+
+def test_sell_pads_less_than_ellpack():
+    """Sigma-sorting exists to cut padding: must never pad MORE."""
+    csr = F.random_csr(2000, 2000, 8.0, seed=0)
+    ell = F.csr_to_ellpack(csr, c=64)
+    sell = F.csr_to_sell(csr, c=64, sigma=512)
+    assert sell.pad_factor <= ell.pad_factor
+    assert sell.pad_factor < 2.5
+
+
+def test_cage10_like_statistics():
+    m = F.cage10_like(seed=1)
+    assert m.n_rows == m.n_cols == 11_397
+    assert abs(m.nnz / m.n_rows - 13.2) < 1.0
+    assert int(m.row_lengths.max()) <= 40
+
+
+def test_graph_transpose_involution_edges():
+    g = G.random_graph(n_nodes=64, avg_degree=4, seed=0)
+    gt = g.transpose()
+    # edge sets must match: (u,v) in g iff (v,u) in gt
+    def edges(graph):
+        src, k = np.nonzero(graph.adj != G.PAD)
+        return set(zip(src.tolist(), graph.adj[src, k].tolist()))
+    assert {(v, u) for (u, v) in edges(g)} == edges(gt)
+    assert g.n_edges == gt.n_edges
+
+
+def test_rmat_graph_is_skewed():
+    g = G.rmat_graph(n_nodes=1 << 10, avg_degree=8, seed=0)
+    deg = g.out_degree
+    assert deg.max() >= 4 * max(deg.mean(), 1)  # heavy tail
+
+
+@pytest.mark.parametrize("gen", [G.random_graph, G.rmat_graph])
+def test_generators_produce_valid_ellpack(gen):
+    g = gen(n_nodes=128, avg_degree=4, seed=3)
+    valid = g.adj[g.adj != G.PAD]
+    assert ((valid >= 0) & (valid < g.n_nodes)).all()

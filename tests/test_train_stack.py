@@ -1,0 +1,252 @@
+"""Tests for optimizer, data pipeline, and train step semantics."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    compress_tree,
+    compression_init,
+    cosine_schedule,
+    decompress_tree,
+    wsd_schedule,
+)
+from repro.optim.adamw import clip_by_global_norm, global_norm
+from repro.train import TrainConfig, init_train_state, make_train_step
+
+RNG = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_matches_reference_impl():
+    """One step vs a hand-rolled AdamW on a toy pytree."""
+    params = {"w": jnp.asarray(RNG.standard_normal((4, 3)), jnp.float32),
+              "b": jnp.asarray(RNG.standard_normal((3,)), jnp.float32)}
+    grads = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.1, params)
+    cfg = AdamWConfig(lr=1e-2, clip_norm=0.0, weight_decay=0.0)
+    new_params, state, _ = adamw_update(grads, adamw_init(params), params, cfg)
+    # reference: first step => mhat = g, vhat = g^2 -> delta = g/(|g|+eps)
+    for k in params:
+        g = 0.1
+        want = np.asarray(params[k]) - 1e-2 * g / (np.sqrt(g**2) + 1e-8)
+        np.testing.assert_allclose(np.asarray(new_params[k]), want, rtol=1e-5)
+    assert int(state["step"]) == 1
+
+
+def test_adamw_weight_decay_only_on_matrices():
+    params = {"w": jnp.ones((4, 4)), "scale": jnp.ones((4,))}
+    grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+    cfg = AdamWConfig(lr=1.0, weight_decay=0.5, clip_norm=0.0)
+    new_params, _, _ = adamw_update(grads, adamw_init(params), params, cfg)
+    assert float(jnp.abs(new_params["w"] - 0.5).max()) < 1e-6   # decayed
+    assert float(jnp.abs(new_params["scale"] - 1.0).max()) < 1e-6  # untouched
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 3.0), "b": jnp.full((6, 6), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(norm) > 1.0
+    same, _ = clip_by_global_norm(tree, 1e9)
+    np.testing.assert_allclose(np.asarray(same["a"]), 3.0)
+
+
+def test_adamw_converges_quadratic():
+    """AdamW minimizes a quadratic in a few hundred steps."""
+    target = jnp.asarray(RNG.standard_normal((8,)), jnp.float32)
+    params = {"x": jnp.zeros((8,))}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, clip_norm=0.0)
+    for _ in range(300):
+        grads = {"x": 2 * (params["x"] - target)}
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.abs(params["x"] - target).max()) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def test_wsd_schedule_shape():
+    f = wsd_schedule(1.0, warmup=10, stable=80, decay=10, floor=0.01)
+    s = lambda t: float(f(jnp.asarray(t)))
+    assert s(0) == 0.0
+    assert s(5) == pytest.approx(0.5)
+    assert s(10) == pytest.approx(1.0)
+    assert s(50) == pytest.approx(1.0)     # stable plateau
+    assert s(90) == pytest.approx(1.0)
+    assert 0.009 <= s(100) <= 0.011        # decayed to floor
+    assert s(95) < 1.0 and s(95) > s(100)  # monotone tail
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(1.0, warmup=10, total=110, floor=0.1)
+    s = lambda t: float(f(jnp.asarray(t)))
+    assert s(10) == pytest.approx(1.0)
+    assert s(110) == pytest.approx(0.1, abs=1e-6)
+    assert s(60) < s(10) and s(60) > s(110)
+
+
+# ---------------------------------------------------------------------------
+# Compression
+# ---------------------------------------------------------------------------
+
+
+def test_int8_roundtrip_error_bound():
+    g = {"w": jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)}
+    st = compression_init(g)
+    q, s, st = compress_tree(g, st)
+    assert q["w"].dtype == jnp.int8
+    back = decompress_tree(q, s)
+    scale = float(s["w"])
+    assert float(jnp.abs(back["w"] - g["w"]).max()) <= scale / 2 + 1e-7
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Sum of decompressed grads ~= sum of true grads (error feedback)."""
+    true_sum = np.zeros((32,), np.float32)
+    fed_sum = np.zeros((32,), np.float32)
+    st = compression_init({"g": jnp.zeros((32,))})
+    for i in range(50):
+        g = {"g": jnp.asarray(RNG.standard_normal(32) * (1 + i % 5), jnp.float32)}
+        q, s, st = compress_tree(g, st)
+        back = decompress_tree(q, s)
+        true_sum += np.asarray(g["g"])
+        fed_sum += np.asarray(back["g"])
+    # residual is bounded by the last quantization error, not accumulated
+    final_err = np.abs(true_sum - fed_sum).max()
+    assert final_err <= float(s["g"]) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=3)
+    gen1 = SyntheticLM(cfg)
+    gen2 = SyntheticLM(cfg)
+    a1, _ = gen1.batch_for(7)
+    a2, _ = gen2.batch_for(7)          # fresh generator, same step
+    np.testing.assert_array_equal(a1, a2)
+    b1, _ = gen1.batch_for(8)
+    assert not np.array_equal(a1, b1)  # different steps differ
+
+
+def test_data_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab_size=500, seq_len=16, global_batch=8, seed=1)
+    gen = SyntheticLM(cfg)
+    shards = [gen.batch_for(3, shard=i, n_shards=4)[0] for i in range(4)]
+    assert all(s.shape == (2, 16) for s in shards)
+    # shards must be pairwise distinct
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(shards[i], shards[j])
+
+
+def test_data_labels_shifted_and_masked():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2)
+    tokens, labels = SyntheticLM(cfg).batch_for(0)
+    np.testing.assert_array_equal(labels[:, :-1], tokens[:, 1:])
+    assert (labels[:, -1] == cfg.ignore_id).all()
+
+
+def test_data_has_learnable_structure():
+    cfg = DataConfig(vocab_size=100, seq_len=64, global_batch=4, markov_period=8)
+    tokens, _ = SyntheticLM(cfg).batch_for(0)
+    np.testing.assert_array_equal(tokens[:, 8], tokens[:, 0])
+    np.testing.assert_array_equal(tokens[:, 16], tokens[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def _tiny_setup(accum=1, compress=False):
+    cfg = configs.reduced_config("qwen2-1.5b")
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=1e-3),
+        remat=None,
+        accum_steps=accum,
+        dtype=jnp.float32,
+        compress_grads=compress,
+    )
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = make_train_step(cfg, tcfg)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    return cfg, state, step, SyntheticLM(dcfg)
+
+
+def test_loss_decreases_over_steps():
+    _, state, step, data = _tiny_setup()
+    losses = []
+    for i in range(30):
+        tokens, labels = data.batch_for(i)
+        state, m = step(state, {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_grad_accumulation_matches_big_batch():
+    """accum=2 over a batch == accum=1 over the same batch (same grads)."""
+    cfg, state1, step1, data = _tiny_setup(accum=1)
+    _, state2, step2, _ = _tiny_setup(accum=2)
+    tokens, labels = data.batch_for(0)
+    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+    s1, m1 = step1(state1, batch)
+    s2, m2 = step2(state2, batch)
+    # identical initial states => identical updated params
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), s1.params, s2.params
+    )
+    worst = max(jax.tree_util.tree_leaves(d))
+    assert worst < 5e-5, f"accum mismatch {worst}"
+
+
+def test_compressed_training_still_learns():
+    _, state, step, data = _tiny_setup(compress=True)
+    losses = []
+    for i in range(30):
+        tokens, labels = data.batch_for(i)
+        state, m = step(state, {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+
+
+def test_bf16_params_with_master_still_learns():
+    """Mixed-precision params (bf16 + f32 master) must converge like f32."""
+    cfg = configs.reduced_config("qwen2-1.5b")
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3), remat=None,
+                       dtype=jnp.float32, param_dtype=jnp.bfloat16)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    assert "master" in state.opt
+    leaves = jax.tree_util.tree_leaves(state.params)
+    assert all(l.dtype == jnp.bfloat16 for l in leaves)
+    step = make_train_step(cfg, tcfg)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    data = SyntheticLM(dcfg)
+    losses = []
+    for i in range(30):
+        tokens, labels = data.batch_for(i)
+        state, m = step(state, {"tokens": jnp.asarray(tokens),
+                                "labels": jnp.asarray(labels)})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+    # master stays f32, params stay bf16
+    assert all(l.dtype == jnp.float32
+               for l in jax.tree_util.tree_leaves(state.opt["master"]))
+    assert all(l.dtype == jnp.bfloat16
+               for l in jax.tree_util.tree_leaves(state.params))
