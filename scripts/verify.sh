@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the whole suite on the pinned environment, with collection
+# errors promoted to hard failures (the seed regression this repo fixed was
+# exactly a silent collection error).
+#
+# Usage: scripts/verify.sh [extra pytest args]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# 1) fast tripwire: every repro.* module must import on the installed jax
+python - <<'EOF'
+import importlib, pkgutil
+import repro
+bad = []
+for info in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+    try:
+        importlib.import_module(info.name)
+    except Exception as e:  # noqa: BLE001 - report every failure kind
+        bad.append(f"{info.name}: {type(e).__name__}: {e}")
+if bad:
+    raise SystemExit("import sweep failed:\n" + "\n".join(bad))
+print(f"import sweep ok ({len(list(pkgutil.walk_packages(repro.__path__, prefix='repro.')))} modules)")
+EOF
+
+# 2) full suite; pytest exits 2 on collection errors, nonzero on failures
+python -m pytest -q "$@"

@@ -1,0 +1,56 @@
+"""Version-adaptive jax compatibility layer.
+
+Everything in the repo that touches a version-sensitive jax surface — mesh
+construction, current-mesh discovery, mesh activation, sharding
+constraints, ``shard_map``/``pjit`` — goes through this package.  See
+``jaxshim`` for the low-level wrappers and ``meshctx`` for the explicit
+:class:`MeshContext` threading that replaced the seed's implicit
+``get_abstract_mesh()`` global lookups.
+
+Supported: jax 0.4.x (the resource-env era, including the pinned 0.4.37)
+through the 0.6+ ``set_mesh``/``AxisType`` era.  Feature detection is by
+attribute probing, never by version comparison.
+"""
+from repro.compat.jaxshim import (
+    HAS_AXIS_TYPE,
+    HAS_GET_ABSTRACT_MESH,
+    HAS_MAKE_MESH,
+    HAS_SET_MESH,
+    HAS_USE_MESH,
+    JAX_VERSION,
+    ambient_mesh,
+    cost_analysis,
+    make_mesh,
+    native_mesh_scope,
+    pjit,
+    shard_map,
+    with_sharding_constraint,
+)
+from repro.compat.meshctx import (
+    NULL_MESH_CONTEXT,
+    MeshContext,
+    concrete_mesh,
+    current_mesh_context,
+    use_mesh,
+)
+
+__all__ = [
+    "JAX_VERSION",
+    "HAS_AXIS_TYPE",
+    "HAS_GET_ABSTRACT_MESH",
+    "HAS_SET_MESH",
+    "HAS_USE_MESH",
+    "HAS_MAKE_MESH",
+    "make_mesh",
+    "ambient_mesh",
+    "native_mesh_scope",
+    "with_sharding_constraint",
+    "cost_analysis",
+    "shard_map",
+    "pjit",
+    "MeshContext",
+    "NULL_MESH_CONTEXT",
+    "concrete_mesh",
+    "current_mesh_context",
+    "use_mesh",
+]

@@ -1,0 +1,155 @@
+"""Explicit mesh threading: :class:`MeshContext` and the ambient stack.
+
+The seed resolved the active mesh by calling ``jax.sharding.
+get_abstract_mesh()`` at six scattered sites — an API that only exists on
+new jax, and an *implicit global* besides.  This module inverts that:
+
+* A :class:`MeshContext` is an explicit, version-independent handle on a
+  mesh (or on "no mesh").  Model construction and the launch layers thread
+  it through directly (``param_specs(..., mesh=...)``, ``ServeEngine(...,
+  mesh=...)``, ``train_loop(..., mesh=...)``).
+* :func:`use_mesh` gives the old context-manager ergonomics back: entering
+  a ``MeshContext`` pushes it on a thread-local stack *and* activates the
+  mesh natively (``set_mesh`` / ``use_mesh`` / legacy ``with mesh:``) so
+  plain jax code inside the scope still sees it.
+* :func:`current_mesh_context` is the single discovery point: explicit
+  stack first, then whatever mesh jax itself has active, then the null
+  context (single-device smoke paths).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+from repro.compat import jaxshim
+
+
+class MeshContext:
+    """Explicit handle on a device mesh, usable as a context manager.
+
+    Wraps a concrete ``Mesh``, an ``AbstractMesh`` (new jax), or ``None``
+    (no mesh: every query degrades to the single-device answer).  Axis
+    queries accept the repo's *logical* axis convention: ``None`` (unsharded),
+    a name, or a tuple of names (sizes multiply).
+    """
+
+    __slots__ = ("mesh", "_entered")
+
+    def __init__(self, mesh: Any = None):
+        if isinstance(mesh, MeshContext):
+            mesh = mesh.mesh
+        self.mesh = mesh
+        self._entered: list = []
+
+    @classmethod
+    def of(cls, mesh: Any) -> "MeshContext":
+        """Coerce a Mesh / MeshContext / None into a MeshContext."""
+        return mesh if isinstance(mesh, MeshContext) else cls(mesh)
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def empty(self) -> bool:
+        return self.mesh is None or getattr(self.mesh, "empty", False)
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return () if self.empty else tuple(self.mesh.axis_names)
+
+    @property
+    def shape(self) -> dict[str, int]:
+        return {} if self.empty else dict(self.mesh.shape)
+
+    def has_axis(self, axis: str) -> bool:
+        return not self.empty and axis in tuple(self.mesh.axis_names)
+
+    def axis_size(self, axis) -> int:
+        """Size of a logical axis; absent axes and ``None`` count as 1."""
+        if axis is None or self.empty:
+            return 1
+        if isinstance(axis, (tuple, list)):
+            n = 1
+            for a in axis:
+                n *= self.axis_size(a)
+            return n
+        return int(dict(self.mesh.shape).get(axis, 1))
+
+    # -- context manager ----------------------------------------------------
+
+    def __enter__(self) -> "MeshContext":
+        if self.empty:
+            # "no mesh" enters as a no-op so `mesh=None` defaults inherit
+            # whatever scope is already active instead of shadowing it
+            self._entered.append(None)
+            return self
+        # activate natively BEFORE pushing: if the native enter raises,
+        # __exit__ never runs, and a pre-pushed entry would corrupt
+        # current_mesh_context() on this thread forever
+        native = jaxshim.native_mesh_scope(self.mesh)
+        native.__enter__()
+        _stack().append(self)
+        self._entered.append(native)
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        native = self._entered.pop()
+        if native is None:
+            return False
+        _stack().pop()
+        return native.__exit__(exc_type, exc, tb)
+
+    def __repr__(self) -> str:
+        return f"MeshContext({self.mesh!r})"
+
+
+NULL_MESH_CONTEXT = MeshContext(None)
+
+_tls = threading.local()
+
+
+def _stack() -> list:
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    return stack
+
+
+def current_mesh_context() -> MeshContext:
+    """The active MeshContext: explicit stack > jax's ambient mesh > null."""
+    stack = _stack()
+    if stack:
+        return stack[-1]
+    mesh = jaxshim.ambient_mesh()
+    return MeshContext(mesh) if mesh is not None else NULL_MESH_CONTEXT
+
+
+def concrete_mesh(mesh: Any):
+    """The concrete multi-device :class:`Mesh` behind ``mesh`` (a Mesh,
+    MeshContext, or None), or ``None`` — the single test for "does explicit
+    device placement apply here" (abstract meshes and 1-device meshes don't
+    need it)."""
+    m = MeshContext.of(mesh).mesh
+    if isinstance(m, jaxshim.Mesh) and m.size > 1:
+        return m
+    return None
+
+
+def use_mesh(mesh: Any) -> MeshContext:
+    """Context manager activating ``mesh`` (``None`` -> inert scope).
+
+    The drop-in replacement for ``with jax.set_mesh(mesh):`` /
+    ``with mesh:`` across jax versions.  Always a fresh ``MeshContext``
+    (the constructor unwraps one), so each ``with`` owns its scope state —
+    long-lived handles like ``Batcher.mesh`` can be entered from several
+    places without sharing bookkeeping.
+    """
+    return MeshContext(mesh)
+
+
+__all__ = [
+    "MeshContext",
+    "NULL_MESH_CONTEXT",
+    "concrete_mesh",
+    "current_mesh_context",
+    "use_mesh",
+]

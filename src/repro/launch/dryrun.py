@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.compat import MeshContext, cost_analysis, use_mesh
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
 from repro.models import blocks as blk
@@ -143,7 +144,7 @@ def apply_opt_flags(cfg, mesh, opts: dict[str, str]):
 
     ssm_mod.SSD_BF16 = opts.get("ssdbf16", "0") == "1"
     if opts.get("padvocab", "0") == "1":
-        tp = mesh.shape.get("model", 1)
+        tp = MeshContext.of(mesh).axis_size("model")
         cfg = dataclasses.replace(cfg, vocab_size=_round_up(cfg.vocab_size, tp))
     if "chunk" in opts and cfg.ssm is not None:
         cfg = dataclasses.replace(
@@ -223,7 +224,7 @@ def _compile_once(cfg, shape_name, mesh, opts, unroll: bool) -> dict:
             getattr(mem, "temp_size_in_bytes", 0)
             + getattr(mem, "argument_size_in_bytes", 0)
         )
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis(compiled)
     out["flops"] = float(cost.get("flops", 0.0))
     out["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
     hlo = compiled.as_text()
@@ -280,7 +281,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, opts: dict[str, str]) -
         "mesh_shape": dict(mesh.shape), "opts": opts,
         "n_layers": cfg.n_layers,
     }
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         # 1) full-depth ROLLED compile: proves it lowers/compiles/fits —
         #    memory analysis, compile timing, HLO size.
         full = _compile_once(cfg, shape_name, mesh, opts, unroll=False)

@@ -4,6 +4,10 @@ A FUNCTION, not a module-level constant: importing this module never touches
 jax device state (the dry-run sets XLA_FLAGS before any jax import; smoke
 tests run on the single real device and never call this).
 
+Mesh construction goes through :func:`repro.compat.make_mesh`, which adapts
+to the installed jax (``axis_types`` only where it exists) — this module
+stays version-agnostic.
+
 Mesh geometry (TPU v5e pods of 256 chips):
   single-pod: (data=16, model=16)        — 256 chips
   multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis is
@@ -13,19 +17,15 @@ Mesh geometry (TPU v5e pods of 256 chips):
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_mesh_from_plan(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Mesh from an elastic re-mesh plan (repro.runtime.elastic)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)

@@ -12,6 +12,7 @@ import numpy as np
 import jax
 
 from repro import configs
+from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.serve import Batcher, GenerationConfig, Request
 
@@ -26,12 +27,27 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "single", "multi"], default="none",
+                    help="production mesh to shard over (needs the device count)")
     args = ap.parse_args()
+    mesh = (None if args.mesh == "none"
+            else make_production_mesh(multi_pod=(args.mesh == "multi")))
 
     cfg = configs.get_config(args.arch) if args.full else configs.reduced_config(args.arch)
-    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    init_fn = lambda k: M.init_params(k, cfg)
+    key = jax.random.PRNGKey(args.seed)
+    if mesh is not None:
+        # params born sharded per the TP/EP partition rules (the dominant
+        # memory consumer does not fit one device at production scale);
+        # constraints inside the traces handle activations, not params
+        from repro.launch import specs as S
+
+        p_shard = S.param_shardings(mesh, cfg, jax.eval_shape(init_fn, key))
+        params = jax.jit(init_fn, out_shardings=p_shard)(key)
+    else:
+        params = init_fn(key)
     gcfg = GenerationConfig(cache_len=args.cache_len)
-    batcher = Batcher(cfg, params, n_slots=args.slots, gcfg=gcfg)
+    batcher = Batcher(cfg, params, n_slots=args.slots, gcfg=gcfg, mesh=mesh)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32)

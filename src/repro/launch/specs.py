@@ -15,6 +15,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
+from repro.compat import MeshContext
 from repro.models import model as M
 from repro.models import sharding as shrd
 from repro.models.config import ModelConfig
@@ -72,14 +73,13 @@ def input_specs_for(cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
 
 
 def _dp_axes(mesh) -> tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ctx = MeshContext.of(mesh)
+    return tuple(a for a in ("pod", "data") if ctx.has_axis(a))
 
 
 def _dp_size(mesh) -> int:
-    n = 1
-    for a in _dp_axes(mesh):
-        n *= mesh.shape[a]
-    return n
+    ctx = MeshContext.of(mesh)
+    return ctx.axis_size(_dp_axes(mesh))
 
 
 def batch_shardings(mesh, batch_sds: dict, batch_size: int):
@@ -99,23 +99,25 @@ FSDP_PARAMS: bool = False
 
 
 def param_shardings(mesh, cfg: ModelConfig, params_sds):
+    ctx = MeshContext.of(mesh)
     n_exp = cfg.moe.n_experts if cfg.moe else 0
-    model_size = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    model_size = ctx.axis_size("model")
     specs = shrd.param_specs(params_sds, n_experts=n_exp,
                              model_axis_size=model_size, mesh=mesh)
-    if FSDP_PARAMS and "data" in mesh.axis_names:
-        specs = shrd.zero1_specs(params_sds, specs, mesh.shape["data"])
+    if FSDP_PARAMS and ctx.has_axis("data"):
+        specs = shrd.zero1_specs(params_sds, specs, ctx.axis_size("data"))
     return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
                                   is_leaf=lambda x: isinstance(x, P))
 
 
 def state_shardings(mesh, cfg: ModelConfig, state_sds, zero1: bool = True):
     """TrainState shardings: params TP; moments TP + ZeRO-1 over data."""
+    ctx = MeshContext.of(mesh)
     p_shard = param_shardings(mesh, cfg, state_sds.params)
     p_specs = jax.tree_util.tree_map(lambda s: s.spec, p_shard,
                                      is_leaf=lambda x: isinstance(x, NamedSharding))
-    if zero1 and "data" in mesh.axis_names:
-        m_specs = shrd.zero1_specs(state_sds.params, p_specs, mesh.shape["data"])
+    if zero1 and ctx.has_axis("data"):
+        m_specs = shrd.zero1_specs(state_sds.params, p_specs, ctx.axis_size("data"))
     else:
         m_specs = p_specs
     to_ns = lambda tree: jax.tree_util.tree_map(
@@ -138,10 +140,11 @@ def state_shardings(mesh, cfg: ModelConfig, state_sds, zero1: bool = True):
 def cache_shardings(mesh, cfg: ModelConfig, caches_sds, batch_size: int):
     """Decode caches: batch over (pod,data) when divisible; kv heads / ssm
     channels over model; ring ``pos``/scalars replicated."""
+    ctx = MeshContext.of(mesh)
     dp = _dp_axes(mesh)
     dp = dp if batch_size % max(_dp_size(mesh), 1) == 0 else ()
     dp_or_none = dp if dp else None
-    model = "model" if "model" in mesh.axis_names else None
+    model = "model" if ctx.has_axis("model") else None
 
     def spec_for(leaf):
         shape = leaf.shape
@@ -151,7 +154,7 @@ def cache_shardings(mesh, cfg: ModelConfig, caches_sds, batch_size: int):
         if nd >= 4 and shape[-1] > 1 and shape[-2] > 1:
             lead = nd - 4
             if shape[-2] == cfg.n_kv_heads and cfg.n_kv_heads:
-                tp_size = max(mesh.shape.get("model", 1), 1)
+                tp_size = max(ctx.axis_size("model"), 1)
                 heads_ok = cfg.n_kv_heads % tp_size == 0
                 if KV_SEQ_SHARD and not heads_ok:
                     # flash-decode: context axis over model ranks
@@ -174,9 +177,7 @@ def cache_shardings(mesh, cfg: ModelConfig, caches_sds, batch_size: int):
         parts = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
         ok = []
         for i, a in enumerate(parts):
-            size = 1
-            for ax in (a if isinstance(a, tuple) else (a,) if a else ()):
-                size *= mesh.shape[ax]
+            size = ctx.axis_size(a)
             ok.append(a if a and leaf.shape[i] % size == 0 else None)
         return NamedSharding(mesh, P(*ok))
 

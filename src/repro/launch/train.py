@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.data import DataConfig
+from repro.launch.mesh import make_production_mesh
 from repro.optim import AdamWConfig, wsd_schedule
 from repro.train import TrainConfig, TrainLoopConfig, train_loop
 
@@ -35,7 +36,11 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "single", "multi"], default="none",
+                    help="production mesh to shard over (needs the device count)")
     args = ap.parse_args()
+    mesh = (None if args.mesh == "none"
+            else make_production_mesh(multi_pod=(args.mesh == "multi")))
 
     cfg = configs.get_config(args.arch) if args.full else configs.reduced_config(args.arch)
     # minicpm trains with WSD (its defining feature); others cosine-free const
@@ -59,7 +64,7 @@ def main() -> None:
         total_steps=args.steps, ckpt_every=args.ckpt_every,
         ckpt_dir=args.ckpt_dir, log_every=10, seed=args.seed,
     )
-    state, history = train_loop(cfg, tcfg, dcfg, lcfg)
+    state, history = train_loop(cfg, tcfg, dcfg, lcfg, mesh=mesh)
     first = sum(h["loss"] for h in history[:5]) / max(len(history[:5]), 1)
     last = sum(h["loss"] for h in history[-5:]) / max(len(history[-5:]), 1)
     print(f"[done] arch={cfg.name} steps={len(history)} "

@@ -19,6 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import current_mesh_context
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, he_init, rms_norm, rope_freqs
 from repro.models.sharding import DATA, TP, shard
@@ -240,11 +241,11 @@ def attention(
         # scores/AV compute then splits TP-ways (keys replicate — one
         # all-gather of K/V per layer, S*Hkv*dh, is far cheaper than TP-x
         # redundant S^2 compute).  See EXPERIMENTS.md §Perf (qwen2 cell).
-        mesh = jax.sharding.get_abstract_mesh()
+        mctx = current_mesh_context()
+        tp = mctx.axis_size(TP)
         if (
-            SEQ_SHARD_FALLBACK
-            and mesh is not None and not mesh.empty and TP in mesh.axis_names
-            and cfg.n_heads % mesh.shape[TP] != 0 and s % mesh.shape[TP] == 0
+            SEQ_SHARD_FALLBACK and mctx.has_axis(TP)
+            and cfg.n_heads % tp != 0 and s % tp == 0
         ):
             q = shard(q, DATA, TP, None, None)
         if causal and ATTN_KV_CHUNK and s % ATTN_KV_CHUNK == 0 and s > ATTN_KV_CHUNK:
@@ -270,11 +271,11 @@ def attention(
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
         # same sequence-parallel fallback for the prefill path (s large)
-        mesh = jax.sharding.get_abstract_mesh()
+        mctx = current_mesh_context()
+        tp = mctx.axis_size(TP)
         if (
-            SEQ_SHARD_FALLBACK
-            and mesh is not None and not mesh.empty and TP in mesh.axis_names
-            and cfg.n_heads % mesh.shape[TP] != 0 and s % mesh.shape[TP] == 0
+            SEQ_SHARD_FALLBACK and mctx.has_axis(TP)
+            and cfg.n_heads % tp != 0 and s % tp == 0
         ):
             q = shard(q, DATA, TP, None, None)
         new_cache = cache_append(cache, k, v)

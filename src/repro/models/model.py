@@ -11,6 +11,12 @@ Public surface:
 ``batch`` is a dict: {"tokens": (B, S) int32} plus, per family,
 ``ctx_embeds`` — the stub modality frontend output (vision tiles / audio
 frames), as the spec requires for [vlm]/[audio] entries.
+
+Every entry point takes an optional ``mesh`` (a Mesh or
+:class:`~repro.compat.MeshContext`): when given, the forward traces under
+that mesh scope so sharding constraints bind to it explicitly; when
+omitted, the ambient ``repro.compat.use_mesh`` scope (or no mesh at all on
+a single device) applies — the old ergonomics, preserved.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.compat import use_mesh
 from repro.models import attention as attn_mod
 from repro.models import blocks as blk
 from repro.models.attention import KVCache
@@ -272,9 +279,11 @@ def forward(
     *,
     dtype=jnp.float32,
     remat: str | None = None,
+    mesh=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Training/scoring forward: full-sequence causal logits + MoE aux."""
-    logits, _, aux = _run(p, cfg, batch, None, dtype, remat)
+    with use_mesh(mesh):
+        logits, _, aux = _run(p, cfg, batch, None, dtype, remat)
     return logits, aux
 
 
@@ -315,9 +324,11 @@ def prefill(
     *,
     dtype=jnp.float32,
     remat: str | None = None,
+    mesh=None,
 ) -> tuple[jnp.ndarray, Caches]:
     """Process the prompt, fill caches, return full-sequence logits."""
-    logits, new_caches, _ = _run(p, cfg, batch, caches, dtype, remat)
+    with use_mesh(mesh):
+        logits, new_caches, _ = _run(p, cfg, batch, caches, dtype, remat)
     return logits, new_caches
 
 
@@ -328,7 +339,9 @@ def decode_step(
     caches: Caches,
     *,
     dtype=jnp.float32,
+    mesh=None,
 ) -> tuple[jnp.ndarray, Caches]:
     """One autoregressive step.  tokens: (B, S_new) with S_new typically 1."""
-    logits, new_caches, _ = _run(p, cfg, {"tokens": tokens}, caches, dtype, None)
+    with use_mesh(mesh):
+        logits, new_caches, _ = _run(p, cfg, {"tokens": tokens}, caches, dtype, None)
     return logits[:, -1], new_caches

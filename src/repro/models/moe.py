@@ -19,6 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import current_mesh_context
 from repro.models.config import ModelConfig
 from repro.models.layers import he_init, swiglu
 from repro.models.sharding import DATA, TP, shard
@@ -109,7 +110,7 @@ def moe_forward(
 
 def _ep_ok(n_experts: int) -> bool:
     """Expert-parallel iff the model axis divides the expert count."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or TP not in mesh.axis_names:
+    ctx = current_mesh_context()
+    if not ctx.has_axis(TP):
         return True
-    return n_experts % mesh.shape[TP] == 0
+    return n_experts % ctx.axis_size(TP) == 0

@@ -3,9 +3,11 @@
 Mesh axes (production): ``(pod, data, model)`` multi-pod or ``(data, model)``
 single-pod.  Batch shards over ``(pod, data)``; tensor-parallel dims over
 ``model``.  Model code never touches the mesh directly — it calls
-:func:`shard` with *logical* axes and the helper adapts to whatever mesh is
-active (dropping absent axes, no-op outside a mesh so smoke tests run on one
-CPU device unchanged).
+:func:`shard` with *logical* axes and the helper adapts to whatever
+:class:`~repro.compat.MeshContext` is active (dropping absent axes, no-op
+outside a mesh so smoke tests run on one CPU device unchanged).  All mesh
+discovery goes through ``repro.compat``: explicit ``ctx=`` / ``mesh=``
+arguments win, the ambient context-manager scope is the fallback.
 """
 from __future__ import annotations
 
@@ -15,15 +17,18 @@ from typing import Any
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import MeshContext, current_mesh_context
+
 #: logical batch axes (flattened onto whichever of these exist in the mesh)
 DATA = ("pod", "data")
 #: tensor-parallel axis
 TP = "model"
 
 
-def current_axis_names() -> tuple[str, ...]:
-    mesh = jax.sharding.get_abstract_mesh()
-    return tuple(mesh.axis_names) if mesh is not None and not mesh.empty else ()
+def current_axis_names(ctx: MeshContext | None = None) -> tuple[str, ...]:
+    ctx = current_mesh_context() if ctx is None else MeshContext.of(ctx)
+    return ctx.axis_names
 
 
 def _filter(axis, present) -> Any:
@@ -35,41 +40,30 @@ def _filter(axis, present) -> Any:
     return axis if axis in present else None
 
 
-def logical(*axes) -> P:
+def logical(*axes, ctx: MeshContext | None = None) -> P:
     """PartitionSpec from logical axes, filtered to the active mesh."""
-    present = current_axis_names()
+    present = current_axis_names(ctx)
     return P(*(_filter(a, present) for a in axes))
 
 
-def _axis_size(mesh, axis) -> int:
-    if axis is None:
-        return 1
-    if isinstance(axis, (tuple, list)):
-        n = 1
-        for a in axis:
-            n *= mesh.shape[a]
-        return n
-    return mesh.shape[axis]
-
-
-def shard(x: jax.Array, *axes) -> jax.Array:
+def shard(x: jax.Array, *axes, ctx: MeshContext | None = None) -> jax.Array:
     """with_sharding_constraint on logical axes.
 
     No-op without a mesh; drops any axis whose mesh size does not divide the
     corresponding array dim (e.g. 12 attention heads on a 16-way model axis)
     — constraining those forces XLA into involuntary full rematerialization.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    ctx = current_mesh_context() if ctx is None else MeshContext.of(ctx)
+    if ctx.empty:
         return x
-    present = tuple(mesh.axis_names)
+    present = ctx.axis_names
     spec = []
     for i, axis in enumerate(axes):
         a = _filter(axis, present)
-        if a is not None and x.shape[i] % _axis_size(mesh, a) != 0:
+        if a is not None and x.shape[i] % ctx.axis_size(a) != 0:
             a = None
         spec.append(a)
-    return jax.lax.with_sharding_constraint(x, P(*spec))
+    return compat.with_sharding_constraint(x, P(*spec), mesh=ctx.mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -145,13 +139,13 @@ def param_specs(params, n_experts: int = 0, model_axis_size: int = 1,
     """Pytree of PartitionSpec matching ``params``.
 
     ``n_experts``/``model_axis_size`` decide expert-parallel vs in-expert
-    tensor-parallel sharding for MoE weights.  ``mesh`` (or the ambient
-    abstract mesh) provides axis sizes for divisibility checks.
+    tensor-parallel sharding for MoE weights.  ``mesh`` (a Mesh or
+    MeshContext; default: the ambient mesh context) provides axis sizes for
+    divisibility checks.
     """
     ep_ok = n_experts > 0 and model_axis_size > 0 and n_experts % model_axis_size == 0
-    if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
-    sizes = dict(mesh.shape) if mesh is not None and not mesh.empty else {}
+    ctx = current_mesh_context() if mesh is None else MeshContext.of(mesh)
+    sizes = ctx.shape
     if model_axis_size and TP not in sizes:
         sizes[TP] = model_axis_size
 

@@ -18,6 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.compat import concrete_mesh, use_mesh
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serve.engine import GenerationConfig, sample_token
@@ -39,16 +40,28 @@ class Batcher:
     """Slot-multiplexed decode over a fixed batch width."""
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
-                 gcfg: GenerationConfig | None = None):
+                 gcfg: GenerationConfig | None = None, mesh=None):
         self.cfg = cfg
         self.params = params
         self.gcfg = gcfg or GenerationConfig()
         self.n_slots = n_slots
+        self.mesh = mesh
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * n_slots
-        self.caches = M.init_caches(
-            cfg, n_slots, max_len=self.gcfg.cache_len, dtype=self.gcfg.dtype
-        )
+        with use_mesh(mesh):
+            self.caches = M.init_caches(
+                cfg, n_slots, max_len=self.gcfg.cache_len, dtype=self.gcfg.dtype
+            )
+        # the scope above only binds trace-time constraints; eager zeros
+        # still land on the default device, so the persistent caches need
+        # explicit placement when a concrete mesh is given
+        m = concrete_mesh(mesh)
+        if m is not None:
+            from repro.launch import specs as S  # deferred: launch sits above serve
+
+            self.caches = jax.device_put(
+                self.caches, S.cache_shardings(m, cfg, self.caches, n_slots)
+            )
         self.completed: list[Request] = []
         self._next_tok = np.zeros((n_slots,), np.int32)
 
@@ -68,12 +81,13 @@ class Batcher:
                 self.slots[i] = req
                 # single-row prefill: run the prompt through a b=1 cache and
                 # splice it into row i of the shared cache
-                one = M.init_caches(self.cfg, 1, max_len=self.gcfg.cache_len,
-                                    dtype=self.gcfg.dtype)
+                with use_mesh(self.mesh):
+                    one = M.init_caches(self.cfg, 1, max_len=self.gcfg.cache_len,
+                                        dtype=self.gcfg.dtype)
                 logits, one = M.prefill(
                     self.params, self.cfg,
                     {"tokens": jnp.asarray(req.prompt[None])}, one,
-                    dtype=self.gcfg.dtype,
+                    dtype=self.gcfg.dtype, mesh=self.mesh,
                 )
                 self.caches = _splice_caches(self.caches, one, i)
                 tok = int(np.asarray(jnp.argmax(logits[0, -1])))
@@ -94,7 +108,8 @@ class Batcher:
             return False
         toks = jnp.asarray(self._next_tok)[:, None]
         logits, self.caches = M.decode_step(
-            self.params, self.cfg, toks, self.caches, dtype=self.gcfg.dtype
+            self.params, self.cfg, toks, self.caches, dtype=self.gcfg.dtype,
+            mesh=self.mesh,
         )
         nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
         for i, req in enumerate(self.slots):

@@ -15,6 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.compat import use_mesh
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -41,12 +42,17 @@ def sample_token(logits: jnp.ndarray, key, gcfg: GenerationConfig) -> jnp.ndarra
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, gcfg: GenerationConfig):
+    def __init__(self, cfg: ModelConfig, params, gcfg: GenerationConfig,
+                 mesh=None):
+        """``mesh`` (Mesh / MeshContext, optional) is inherited by every
+        prefill and decode trace — the serving layer's explicit handle on
+        the launch mesh instead of a process-global lookup."""
         self.cfg = cfg
         self.params = params
         self.gcfg = gcfg
+        self.mesh = mesh
         self._decode = jax.jit(
-            functools.partial(M.decode_step, cfg=cfg, dtype=gcfg.dtype)
+            functools.partial(M.decode_step, cfg=cfg, dtype=gcfg.dtype, mesh=mesh)
         )
 
     def generate(
@@ -58,11 +64,13 @@ class ServeEngine:
         """Greedy/sampled continuation for a (B, S) prompt batch."""
         cfg, gcfg = self.cfg, self.gcfg
         b, s = prompts.shape
-        caches = M.init_caches(cfg, b, max_len=gcfg.cache_len, dtype=gcfg.dtype)
+        with use_mesh(self.mesh):
+            caches = M.init_caches(cfg, b, max_len=gcfg.cache_len, dtype=gcfg.dtype)
         batch = {"tokens": jnp.asarray(prompts)}
         if extras:
             batch.update(extras)
-        logits, caches = M.prefill(self.params, cfg, batch, caches, dtype=gcfg.dtype)
+        logits, caches = M.prefill(self.params, cfg, batch, caches,
+                                   dtype=gcfg.dtype, mesh=self.mesh)
         key = jax.random.PRNGKey(seed)
         out = []
         tok = sample_token(logits[:, -1], key, gcfg)

@@ -18,6 +18,7 @@ from typing import Callable
 import jax
 
 from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
+from repro.compat import concrete_mesh, use_mesh
 from repro.data import DataConfig, SyntheticLM
 from repro.models.config import ModelConfig
 from repro.runtime.heartbeat import StepMonitor
@@ -25,6 +26,22 @@ from repro.train.step import TrainConfig, TrainState, init_train_state, make_tra
 
 import jax.numpy as jnp
 import numpy as np
+
+
+def _placements(mesh, cfg, state_sds, dcfg: DataConfig):
+    """(state, batch) NamedSharding trees for a concrete multi-device mesh,
+    (None, None) otherwise.  The use_mesh scope only binds trace-time
+    constraints — state and batches need explicit ZeRO-1/TP placement."""
+    m = concrete_mesh(mesh)
+    if m is None:
+        return None, None
+    from repro.launch import specs as S  # deferred: launch sits above train
+
+    sds = jax.ShapeDtypeStruct((dcfg.global_batch, dcfg.seq_len), jnp.int32)
+    return (
+        S.state_shardings(m, cfg, state_sds),
+        S.batch_shardings(m, {"tokens": sds, "labels": sds}, dcfg.global_batch),
+    )
 
 
 @dataclasses.dataclass
@@ -43,49 +60,66 @@ def train_loop(
     lcfg: TrainLoopConfig,
     log: Callable[[str], None] = print,
     fail_at_step: int | None = None,
+    mesh=None,
 ) -> tuple[TrainState, list[dict]]:
     """Run (or resume) training.  ``fail_at_step`` injects a crash for the
-    fault-tolerance tests.  Returns (final state, metric history)."""
-    key = jax.random.PRNGKey(lcfg.seed)
-    state = init_train_state(key, cfg, tcfg)
-    start_step = 0
-    manager = CheckpointManager(lcfg.ckpt_dir) if lcfg.ckpt_dir else None
+    fault-tolerance tests.  ``mesh`` (Mesh / MeshContext, optional) scopes
+    init, restore and every step — the launch layer hands the production
+    mesh down explicitly instead of relying on a process-global.  Returns
+    (final state, metric history)."""
+    with use_mesh(mesh):
+        key = jax.random.PRNGKey(lcfg.seed)
+        init_fn = lambda k: init_train_state(k, cfg, tcfg)
+        state_sds = jax.eval_shape(init_fn, key)
+        st_shard, b_shard = _placements(mesh, cfg, state_sds, dcfg)
+        if st_shard is not None:
+            # born sharded: at production scale the unsharded state does
+            # not fit one device, so placement cannot be a post-init copy
+            state = jax.jit(init_fn, out_shardings=st_shard)(key)
+        else:
+            state = init_fn(key)
+        start_step = 0
+        manager = CheckpointManager(lcfg.ckpt_dir) if lcfg.ckpt_dir else None
 
-    if lcfg.ckpt_dir and latest_step(lcfg.ckpt_dir) is not None:
-        restored, extra, step = restore_checkpoint(lcfg.ckpt_dir, state)
-        state = jax.tree_util.tree_map(jnp.asarray, restored)
-        start_step = step
-        log(f"[resume] restored checkpoint at step {step}")
+        if lcfg.ckpt_dir and latest_step(lcfg.ckpt_dir) is not None:
+            restored, extra, step = restore_checkpoint(lcfg.ckpt_dir, state)
+            state = jax.tree_util.tree_map(jnp.asarray, restored)
+            if st_shard is not None:
+                state = jax.device_put(state, st_shard)
+            start_step = step
+            log(f"[resume] restored checkpoint at step {step}")
 
-    step_fn = jax.jit(make_train_step(cfg, tcfg))
-    data = SyntheticLM(dcfg)
-    monitor = StepMonitor()
-    history: list[dict] = []
+        step_fn = jax.jit(make_train_step(cfg, tcfg))
+        data = SyntheticLM(dcfg)
+        monitor = StepMonitor()
+        history: list[dict] = []
 
-    for step in range(start_step, lcfg.total_steps):
-        if fail_at_step is not None and step == fail_at_step:
-            if manager:
-                manager.wait()
-            raise RuntimeError(f"injected failure at step {step}")
-        tokens, labels = data.batch_for(step)
-        batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
-        t0 = time.perf_counter()
-        state, metrics = step_fn(state, batch)
-        metrics = {k: float(v) for k, v in metrics.items()}
-        dt = time.perf_counter() - t0
-        monitor.record(step, dt)
-        metrics["step"] = step
-        metrics["wall_s"] = dt
-        history.append(metrics)
-        if step % lcfg.log_every == 0:
-            log(
-                f"[train] step {step} loss {metrics['loss']:.4f} "
-                f"gnorm {metrics['grad_norm']:.3f} {dt*1e3:.0f} ms"
-            )
-        if manager and (step + 1) % lcfg.ckpt_every == 0:
-            manager.save_async(step + 1, state, extra={"data": {"step": step + 1}})
-    if manager:
-        manager.wait()
-    if monitor.straggler_events:
-        log(f"[monitor] {len(monitor.straggler_events)} straggler step(s) flagged")
-    return state, history
+        for step in range(start_step, lcfg.total_steps):
+            if fail_at_step is not None and step == fail_at_step:
+                if manager:
+                    manager.wait()
+                raise RuntimeError(f"injected failure at step {step}")
+            tokens, labels = data.batch_for(step)
+            batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+            if b_shard is not None:
+                batch = jax.device_put(batch, b_shard)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            monitor.record(step, dt)
+            metrics["step"] = step
+            metrics["wall_s"] = dt
+            history.append(metrics)
+            if step % lcfg.log_every == 0:
+                log(
+                    f"[train] step {step} loss {metrics['loss']:.4f} "
+                    f"gnorm {metrics['grad_norm']:.3f} {dt*1e3:.0f} ms"
+                )
+            if manager and (step + 1) % lcfg.ckpt_every == 0:
+                manager.save_async(step + 1, state, extra={"data": {"step": step + 1}})
+        if manager:
+            manager.wait()
+        if monitor.straggler_events:
+            log(f"[monitor] {len(monitor.straggler_events)} straggler step(s) flagged")
+        return state, history

@@ -1,0 +1,90 @@
+"""Property-testing shim: real `hypothesis` when installed, deterministic
+fixed-example degradation when not.
+
+The three property-test modules (test_kernels, test_sdv_model,
+test_sparse_formats) import ``given``/``settings``/``st`` from here instead
+of from ``hypothesis`` directly, so a missing dependency degrades the
+property sweep into a small deterministic example grid instead of killing
+collection for the whole module (the seed's failure mode: 3 modules — the
+entire paper-reproduction surface — uncollectable over one import).
+
+Fallback semantics: each strategy exposes a list of boundary-flavored
+examples (min / max / midpoint / sampled values); ``@given`` runs the test
+once per zipped-and-cycled combination, so every parameter still hits its
+extremes.  ``@settings`` is a no-op.  Real hypothesis, when present, is
+used unchanged — install the pinned test deps (requirements.txt) to get the
+full property sweep.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    class _Strategy:
+        """A fixed, deterministic example list standing in for a strategy."""
+
+        def __init__(self, examples):
+            self.examples = list(examples)
+            if not self.examples:
+                raise ValueError("strategy needs at least one example")
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=100, **_):
+            lo, hi = int(min_value), int(max_value)
+            mid = lo + (hi - lo) // 2
+            return _Strategy(sorted({lo, min(lo + 1, hi), mid, max(hi - 1, lo), hi}))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy([lo, (lo + hi) / 2.0, hi])
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(list(elements))
+
+    st = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = max(len(s.examples) for s in strategies.values())
+                for i in range(n):
+                    example = {
+                        name: s.examples[i % len(s.examples)]
+                        for name, s in strategies.items()
+                    }
+                    fn(*args, **example, **kwargs)
+
+            # hide the strategy-filled params from pytest's fixture
+            # resolution (wraps copies the original signature otherwise)
+            sig = inspect.signature(fn)
+            keep = [p for n_, p in sig.parameters.items() if n_ not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

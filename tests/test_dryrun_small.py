@@ -32,6 +32,7 @@ COMMON = textwrap.dedent(
     import jax, jax.numpy as jnp
     from repro import configs
     from repro.launch import specs as S
+    from repro.compat import cost_analysis, use_mesh
     from repro.launch.mesh import make_mesh_from_plan
     from repro.launch.dryrun import collective_stats
     from repro.models import model as M
@@ -55,14 +56,14 @@ def test_train_step_lowers_on_multipod_mesh(arch):
             "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
             "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
         }}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             state_sds = S.abstract_train_state(cfg, tcfg)
             st_sh = S.state_shardings(mesh, cfg, state_sds)
             b_sh = S.batch_shardings(mesh, batch_sds, b)
             fn = make_train_step(cfg, tcfg)
             lowered = jax.jit(fn, in_shardings=(st_sh, b_sh)).lower(state_sds, batch_sds)
             compiled = lowered.compile()
-            cost = compiled.cost_analysis()
+            cost = cost_analysis(compiled)
             mem = compiled.memory_analysis()
             stats = collective_stats(compiled.as_text())
         print(json.dumps({{
@@ -88,7 +89,7 @@ def test_decode_step_lowers_with_cache_shardings():
         mesh = make_mesh_from_plan((4, 2), ("data", "model"))
         b, cache_len = 8, 64
         batch_sds = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             params_sds = S.abstract_params(cfg)
             caches_sds = S.abstract_caches(cfg, b, cache_len, jnp.bfloat16)
             p_sh = S.param_shardings(mesh, cfg, params_sds)
@@ -101,7 +102,7 @@ def test_decode_step_lowers_with_cache_shardings():
                 params_sds, batch_sds, caches_sds)
             compiled = lowered.compile()
         print(json.dumps({"ok": True,
-                          "flops": float(compiled.cost_analysis().get("flops", 0))}))
+                          "flops": float(cost_analysis(compiled).get("flops", 0))}))
         """
     )
     res = _run(code)
@@ -119,7 +120,7 @@ def test_sharded_forward_matches_single_device():
         ref_logits, _ = M.forward(params, cfg, {"tokens": toks})
 
         mesh = make_mesh_from_plan((4, 2), ("data", "model"))
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             p_sh = S.param_shardings(mesh, cfg, params)
             params_s = jax.device_put(params, p_sh)
             toks_s = jax.device_put(toks, S.batch_shardings(mesh, {"t": toks}, 8)["t"])
@@ -139,7 +140,7 @@ def test_zero1_shards_optimizer_state():
         cfg = configs.reduced_config("qwen2-1.5b")
         mesh = make_mesh_from_plan((4, 2), ("data", "model"))
         tcfg = TrainConfig(optimizer=AdamWConfig(), dtype=jnp.bfloat16, remat=None)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             state_sds = S.abstract_train_state(cfg, tcfg)
             st_sh = S.state_shardings(mesh, cfg, state_sds, zero1=True)
         # at least one moment leaf must be sharded over 'data'
@@ -175,7 +176,7 @@ def test_elastic_restart_onto_different_mesh(tmp_path):
         restored, extra, step = restore_checkpoint({str(tmp_path)!r}, real)
 
         mesh = make_mesh_from_plan((4, 2), ("data", "model"))
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             sh = S.state_shardings(mesh, cfg, real)
             sharded = jax.device_put(
                 jax.tree_util.tree_map(jnp.asarray, restored), sh)

@@ -6,8 +6,7 @@ block shapes and dtypes — including the vsetvl-style ragged tails.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_fallback import given, settings, st
 
 import jax.numpy as jnp
 

@@ -8,8 +8,7 @@ SpMV slowdown cells within tolerance.
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core import sdv, sweep, traffic
 from repro.core.autotune import tune_vl

@@ -1,8 +1,7 @@
 """Property tests for the sparse/graph substrates."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.graphs import gen as G
 from repro.sparse import formats as F
