@@ -3,6 +3,9 @@
 Wall time in interpret mode is NOT a TPU performance statement (the roofline
 section covers that); this table proves the kernels run and tracks the
 oracle's cost as a sanity ratio.  CSV: name, us_per_call, derived.
+
+``collect()`` returns the same rows as machine-readable dicts (including the
+measured pad_factor where the row has one) for ``BENCH_kernels.json``.
 """
 import time
 
@@ -27,32 +30,63 @@ def _time(fn, *args, reps=3):
 
 
 def rows():
+    """Yield (name, us_per_call, meta_dict); meta is the derived column."""
     m = F.random_csr(2000, 2000, 10.0, seed=0)
     ell = F.csr_to_ellpack(m, c=128)
     x = np.random.default_rng(0).standard_normal(2000)
     cols, vals, xj = jnp.asarray(ell.cols), jnp.asarray(ell.vals), jnp.asarray(x)
     t_kernel = _time(lambda: ops.spmv(ell, x, vl=128))
     t_ref = _time(lambda: ref.spmv_ref(cols, vals, xj, m.n_rows))
-    yield ("spmv_vl128_interpret", t_kernel, f"oracle_us={t_ref:.0f}")
+    yield ("spmv_vl128_interpret", t_kernel,
+           {"oracle_us": round(t_ref), "pad_factor": round(ell.pad_factor, 4)})
+
+    # The SELL-C-sigma payoff: a skewed row-length distribution where the
+    # uniform-width layout pays the global max per row and the bucketed
+    # slabs pay only their sigma-window widths.
+    skew = F.random_csr(2000, 2000, 8.0, seed=3, skew=1.2)
+    ell_s = F.csr_to_ellpack(skew, c=128)
+    slabs = F.csr_to_sell_slabs(skew, c=128, sigma=1024)
+    xs = np.random.default_rng(1).standard_normal(2000)
+    t_ell = _time(lambda: ops.spmv(ell_s, xs, vl=128))
+    yield ("spmv_skew_ellpack_vl128", t_ell,
+           {"pad_factor": round(ell_s.pad_factor, 4)})
+    t_sell = _time(lambda: ops.spmv(slabs, xs, vl=128))
+    yield ("spmv_skew_sell_slabs_vl128", t_sell,
+           {"pad_factor": round(slabs.pad_factor, 4), "n_buckets": slabs.n_buckets})
 
     sig = np.random.default_rng(1).standard_normal((8, 2048))
     t_kernel = _time(lambda: ops.fft(sig))
     wre, wim = ref.fft_twiddles(2048)
     sr, si = jnp.asarray(sig), jnp.zeros_like(jnp.asarray(sig))
     t_ref = _time(lambda: ref.fft_stockham_ref(sr, si, wre, wim))
-    yield ("fft2048_b8_interpret", t_kernel, f"oracle_us={t_ref:.0f}")
+    yield ("fft2048_b8_interpret", t_kernel, {"oracle_us": round(t_ref)})
 
     g = G.random_graph(n_nodes=2048, avg_degree=8, seed=2)
     t_kernel = _time(lambda: ops.bfs(g, 0, vl=256), reps=1)
-    yield ("bfs_2k_nodes_full_run", t_kernel, f"edges={g.n_edges}")
+    yield ("bfs_2k_nodes_full_run", t_kernel, {"edges": g.n_edges})
+
+    t_kernel = _time(lambda: ops.bfs(g, 0, vl=256, layout="sell"), reps=1)
+    yield ("bfs_2k_nodes_sell", t_kernel, {"edges": g.n_edges})
 
     t_kernel = _time(lambda: ops.pagerank(g, iters=5, vl=256), reps=1)
-    yield ("pagerank_2k_5iter", t_kernel, f"edges={g.n_edges}")
+    yield ("pagerank_2k_5iter", t_kernel, {"edges": g.n_edges})
+
+    t_kernel = _time(lambda: ops.pagerank(g, iters=5, vl=256, layout="sell"), reps=1)
+    yield ("pagerank_2k_5iter_sell", t_kernel, {"edges": g.n_edges})
 
 
-def main():
-    for name, us, derived in rows():
-        print(f"{name},{us:.0f},{derived}")
+def collect() -> dict:
+    """name -> {us_per_call, ...meta} for machine-readable emission."""
+    return {
+        name: {"us_per_call": round(us, 1), **meta} for name, us, meta in rows()
+    }
+
+
+def main(precomputed: dict | None = None):
+    table = precomputed if precomputed is not None else collect()
+    for name, entry in table.items():
+        extras = ",".join(f"{k}={v}" for k, v in entry.items() if k != "us_per_call")
+        print(f"{name},{entry['us_per_call']:.0f},{extras}")
 
 
 if __name__ == "__main__":

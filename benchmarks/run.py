@@ -3,8 +3,15 @@
 ``PYTHONPATH=src python -m benchmarks.run`` prints CSV:
   name,us_per_call,derived   (kernel microbenches)
 plus the fig3/fig4/fig5 sweep tables and, when dry-run artifacts exist under
-results/dryrun/, the roofline summary.
+results/dryrun/, the roofline summary.  The kernel microbench table is also
+written machine-readable to ``BENCH_kernels.json`` (name -> us_per_call,
+pad_factor, ...) for CI artifact upload and trend tracking.
+
+``--kernels-only`` runs just the microbench table + JSON emission (the CI
+bench smoke step).
 """
+import argparse
+import json
 import os
 import sys
 
@@ -15,11 +22,30 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 
-def main() -> None:
-    from benchmarks import bench_bandwidth, bench_kernels, bench_latency, bench_slowdown
+def _emit_kernels(json_path: str) -> None:
+    from benchmarks import bench_kernels
 
+    table = bench_kernels.collect()
     print("# table: kernel microbenchmarks (name,us_per_call,derived)")
-    bench_kernels.main()
+    bench_kernels.main(precomputed=table)
+    with open(json_path, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=True)
+    print(f"# wrote {json_path}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernels-only", action="store_true",
+                    help="only the kernel microbench table + JSON")
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="machine-readable kernel table output path")
+    args = ap.parse_args(argv)
+
+    _emit_kernels(args.json)
+    if args.kernels_only:
+        return
+
+    from benchmarks import bench_bandwidth, bench_latency, bench_slowdown
 
     print("\n# table: paper Fig 3 (kernel,series,extra_latency,cycles,us)")
     bench_latency.main()

@@ -58,6 +58,16 @@ def main():
               f"(x{fpga.speedup_over_worst():.1f} over worst) | "
               f"tpu-v5e best block={tpu.vl}")
 
+    print("\n== co-design: SELL-C-sigma (C, sigma, w_block) on cage10-like ==")
+    from repro.core.autotune import tune_sell_layout
+    from repro.sparse import cage10_like
+
+    m = cage10_like(seed=0)
+    tuned = tune_sell_layout(m.row_lengths, n_cols=m.n_cols)
+    print(f"  best C={tuned.c} sigma={tuned.sigma} w_block={tuned.w_block} "
+          f"measured_pad={tuned.pad_factor:.3f} "
+          f"(x{tuned.speedup_over_worst():.2f} over worst candidate)")
+
     if args.csv:
         with open(args.csv, "w") as f:
             f.write("sweep,kernel,series,knob,cycles\n")

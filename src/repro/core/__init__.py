@@ -9,6 +9,13 @@
 - :mod:`repro.core.autotune` — the co-design loop: SDV-modeled block-shape
   selection for the TPU kernels
 """
+from repro.core.autotune import (
+    SellTuneResult,
+    TuneResult,
+    measured_pad_factor,
+    tune_sell_layout,
+    tune_vl,
+)
 from repro.core.vconfig import PAPER_VLS, SCALAR_VL, VectorConfig, sweep_configs
 from repro.core.sdv import (
     MachineParams,
@@ -22,6 +29,11 @@ from repro.core.sdv import (
 )
 
 __all__ = [
+    "SellTuneResult",
+    "TuneResult",
+    "measured_pad_factor",
+    "tune_sell_layout",
+    "tune_vl",
     "PAPER_VLS",
     "SCALAR_VL",
     "VectorConfig",

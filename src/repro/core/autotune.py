@@ -15,7 +15,10 @@ import dataclasses
 import math
 from typing import Callable, Sequence
 
+import numpy as np
+
 from repro.core.sdv import MachineParams, SDVMachine, Trace, tpu_v5e_machine
+from repro.core.traffic import SpMVProblem, spmv_trace
 from repro.core.vconfig import VectorConfig
 
 #: TPU v5e VMEM budget a single kernel invocation should stay under
@@ -82,6 +85,132 @@ def tune_vl(
         raise ValueError("no candidate vl fits the VMEM budget")
     best_vl, best_cycles = min(rows, key=lambda r: r[1])
     return TuneResult(vl=best_vl, cycles=best_cycles, table=tuple(rows))
+
+
+# ---------------------------------------------------------------------------
+# SELL-C-sigma layout co-selection: (C, sigma, w_block) against the
+# *measured* per-bucket pad_factor of the actual row-length distribution.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SellTuneResult:
+    c: int
+    sigma: int
+    w_block: int
+    cycles: float
+    pad_factor: float
+    #: (c, sigma, measured pad_factor, modeled cycles) per candidate
+    table: tuple[tuple[int, int, float, float], ...]
+
+    def speedup_over_worst(self) -> float:
+        worst = max(cy for *_, cy in self.table)
+        return worst / self.cycles
+
+
+def measured_pad_factor(
+    row_lengths: np.ndarray, c: int, sigma: int, pow2_buckets: bool = True
+) -> float:
+    """padded_nnz / nnz of the SELL-C-sigma layout on *these* row lengths.
+
+    Computed with the packer's own helpers (sigma-window sort, per-C-slice
+    max width, power-of-two bucket rounding) without building the layout,
+    so the tuner can sweep (C, sigma) in microseconds and can never
+    disagree with what :func:`repro.sparse.formats.csr_to_sell_slabs`
+    actually builds.
+    """
+    from repro.sparse.formats import next_pow2, sigma_sort_order, slice_widths
+
+    n = len(row_lengths)
+    if n == 0:
+        return 1.0
+    lengths = np.asarray(row_lengths, np.int64)
+    order = sigma_sort_order(lengths, sigma)
+    widths = slice_widths(lengths, order, c)
+    if pow2_buckets:
+        widths = next_pow2(widths)
+    return float(widths.sum() * c) / max(int(lengths.sum()), 1)
+
+
+def pick_w_block(
+    c: int,
+    max_width: int,
+    elem_bytes: int = 12,                      # f64 value + i32 col index
+    vmem_budget: float = VMEM_BUDGET_BYTES / 8,
+    multiple: int = SUBLANE,
+) -> int:
+    """Largest sublane-aligned W tile whose double-buffered slab fits VMEM."""
+    w = multiple
+    while (
+        w * 2 <= max_width
+        and 2 * (w * 2) * c * elem_bytes <= vmem_budget
+    ):
+        w *= 2
+    # Never exceed the padded slab width, but stay a power of two so the
+    # (w_block, C) tiles keep their sublane alignment.
+    pow2_cap = 1 << max(int(max_width) - 1, 0).bit_length()
+    return max(1, min(w, pow2_cap))
+
+
+def tune_sell_layout(
+    row_lengths: np.ndarray,
+    n_cols: int | None = None,
+    machine: MachineParams | None = None,
+    candidates_c: Sequence[int] | None = None,
+    sigma_factors: Sequence[int] = (1, 4, 8, 32),
+    vmem_budget: float = VMEM_BUDGET_BYTES,
+) -> SellTuneResult:
+    """Co-select (C, sigma, w_block) for the SELL SpMV kernel.
+
+    For every candidate the tuner *measures* the pad_factor the packer would
+    produce on the given row-length distribution, feeds it into the SpMV
+    transaction trace, and scores SDV-modeled cycles — the paper's co-design
+    loop driving a real layout choice instead of only printing a table.
+    """
+    machine = machine or tpu_v5e_machine()
+    lengths = np.asarray(row_lengths, np.int64)
+    n_rows = len(lengths)
+    nnz = int(lengths.sum())
+    n_cols = int(n_cols if n_cols is not None else n_rows)
+    cands = list(candidates_c) if candidates_c is not None else [
+        v for v in candidate_vls(max_vl=1024) if v <= max(n_rows, SUBLANE)
+    ] or [SUBLANE]
+    sdv = SDVMachine(machine)
+    # The x vector stays VMEM-resident for every candidate (kernel design),
+    # so it is part of each footprint; the slab tile is double-buffered
+    # (cols i32 + vals f64 = 12 B/entry) at the smallest usable W block.
+    x_resident = 8.0 * n_cols
+    rows: list[tuple[int, int, float, float]] = []
+    for c in cands:
+        if x_resident + 2 * SUBLANE * c * 12.0 > vmem_budget:
+            continue
+        seen: set[int] = set()
+        for f in sigma_factors:
+            sigma = min(max(f * c, c), max(n_rows, 1))
+            if sigma in seen:
+                continue
+            seen.add(sigma)
+            pf = measured_pad_factor(lengths, c, sigma)
+            prob = SpMVProblem(n_rows=n_rows, n_cols=n_cols, nnz=nnz, pad_factor=pf)
+            trace = spmv_trace(prob, VectorConfig(vl=c, lanes=machine.lanes))
+            rows.append((c, sigma, pf, sdv.run(trace).cycles))
+    if not rows:
+        raise ValueError("no (C, sigma) candidate fits the VMEM budget")
+    best = min(rows, key=lambda r: r[3])
+    max_w = int(lengths.max()) if n_rows else 1
+    return SellTuneResult(
+        c=best[0],
+        sigma=best[1],
+        # The tile budget is whatever the x-resident vector leaves over, so
+        # the returned triple is consistent with the candidate filter above.
+        w_block=pick_w_block(
+            best[0], max(max_w, 1),
+            vmem_budget=max(vmem_budget - x_resident, 2 * SUBLANE * best[0] * 12.0),
+        ),
+        cycles=best[3],
+        pad_factor=best[2],
+        table=tuple(rows),
+    )
 
 
 def align_block(dim: int, multiple: int = LANE) -> int:

@@ -1,7 +1,10 @@
-"""Graph substrate: generators and host references for BFS / PageRank."""
+"""Graph substrate: generators, SELL slab packing and host references for
+BFS / PageRank."""
 from repro.graphs.gen import (
     EllpackGraph,
+    SellGraphSlabs,
     bfs_reference,
+    graph_to_sell_slabs,
     pagerank_reference,
     random_graph,
     rmat_graph,
@@ -9,7 +12,9 @@ from repro.graphs.gen import (
 
 __all__ = [
     "EllpackGraph",
+    "SellGraphSlabs",
     "bfs_reference",
+    "graph_to_sell_slabs",
     "pagerank_reference",
     "random_graph",
     "rmat_graph",

@@ -35,22 +35,112 @@ class EllpackGraph:
         return (self.adj != PAD).sum(axis=1)
 
     def transpose(self) -> "EllpackGraph":
-        """Reverse graph (in-neighbors), used by pull-style PageRank."""
+        """Reverse graph (in-neighbors), used by pull-style PageRank.
+
+        Vectorized (stable sort by destination + one scatter), so reversing
+        stays cheap at millions of edges.
+        """
         src, k = np.nonzero(self.adj != PAD)
         dst = self.adj[src, k]
         order = np.argsort(dst, kind="stable")
         src, dst = src[order], dst[order]
         counts = np.bincount(dst, minlength=self.n_nodes)
-        width = max(1, int(counts.max()))
+        width = max(1, int(counts.max()) if len(counts) else 1)
         radj = np.full((self.n_nodes, width), PAD, np.int32)
-        offsets = np.zeros(self.n_nodes, np.int64)
         starts = np.zeros(self.n_nodes + 1, np.int64)
         np.cumsum(counts, out=starts[1:])
-        for i in range(len(src)):
-            d = dst[i]
-            radj[d, offsets[d]] = src[i]
-            offsets[d] += 1
+        within = np.arange(len(src), dtype=np.int64) - starts[dst]
+        radj[dst, within] = src
         return EllpackGraph(adj=radj, n_nodes=self.n_nodes)
+
+
+@dataclasses.dataclass(frozen=True)
+class SellGraphSlabs:
+    """Width-bucketed SELL-C-sigma adjacency for the pull-style kernels.
+
+    Nodes are sorted by degree within sigma windows and grouped into
+    C-node slices; slices are padded to the next power-of-two width and
+    bucketed by that width.  ``bucket_adj[b]`` is (n_slices_b, C, W_b) —
+    node-major, matching the (vl, width) orientation of the BFS/PageRank
+    kernels — and ``bucket_nodes[b]`` is (n_slices_b, C) mapping each lane
+    to its original node id (``n_nodes`` = padding/dump slot).
+    """
+
+    bucket_adj: tuple[np.ndarray, ...]    # each (n_slices_b, C, W_b) int32
+    bucket_nodes: tuple[np.ndarray, ...]  # each (n_slices_b, C) int32
+    n_nodes: int
+    sigma: int
+
+    @property
+    def c(self) -> int:
+        return self.bucket_adj[0].shape[1]
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        return tuple(a.shape[2] for a in self.bucket_adj)
+
+    @property
+    def n_edges(self) -> int:
+        return int(sum((a != PAD).sum() for a in self.bucket_adj))
+
+    @property
+    def padded_entries(self) -> int:
+        return sum(a.size for a in self.bucket_adj)
+
+    @property
+    def pad_factor(self) -> float:
+        return self.padded_entries / max(self.n_edges, 1)
+
+
+def graph_to_sell_slabs(
+    g: EllpackGraph, c: int, sigma: int | None = None
+) -> SellGraphSlabs:
+    """Bucket a degree-padded graph into SELL slabs (vectorized).
+
+    The adjacency rows are already materialized in ``g.adj``; slabs are just
+    a degree-sorted row gather plus per-bucket column trims, so conversion
+    is a handful of array ops even at millions of nodes.
+    """
+    from repro.sparse.formats import next_pow2, sigma_sort_order, slice_widths
+
+    sigma = int(sigma or 8 * c)
+    n = g.n_nodes
+    deg = (g.adj != PAD).sum(axis=1).astype(np.int64)
+    order = sigma_sort_order(deg, sigma)
+    bwidths = next_pow2(slice_widths(deg, order, c))
+    n_slices = len(bwidths)
+
+    nodes_padded = np.full(n_slices * c, n, np.int64)
+    nodes_padded[:n] = order
+    nodes_by_slice = nodes_padded.reshape(n_slices, c).astype(np.int32)
+
+    # Sorted adjacency with a PAD guard row for padding lanes.
+    adj_guard = np.concatenate(
+        [g.adj, np.full((1, g.width), PAD, np.int32)], axis=0
+    )
+    bucket_adj, bucket_nodes = [], []
+    for w in np.unique(bwidths):
+        ids = np.nonzero(bwidths == w)[0]
+        rows = adj_guard[nodes_by_slice[ids].reshape(-1)]   # (S_b*C, width)
+        w = int(w)
+        if w <= g.width:
+            rows = rows[:, :w]
+        else:
+            rows = np.pad(rows, ((0, 0), (0, w - g.width)), constant_values=PAD)
+        bucket_adj.append(np.ascontiguousarray(rows.reshape(len(ids), c, w)))
+        bucket_nodes.append(nodes_by_slice[ids])
+    kept = sum(int((a != PAD).sum()) for a in bucket_adj)
+    if kept != int(deg.sum()):
+        raise ValueError(
+            "adjacency rows must be left-justified (neighbors in columns "
+            "[0, degree)); the width trim dropped edges"
+        )
+    return SellGraphSlabs(
+        bucket_adj=tuple(bucket_adj),
+        bucket_nodes=tuple(bucket_nodes),
+        n_nodes=n,
+        sigma=sigma,
+    )
 
 
 def random_graph(

@@ -67,6 +67,76 @@ def bfs_step(
     )(adj, dist, level)
 
 
+def _bfs_sell_step_kernel(adj_ref, nodes_ref, dist_ref, level_ref, out_ref):
+    level = level_ref[0]
+    adj = adj_ref[0]                          # (C, W_b)
+    nodes = nodes_ref[0]                      # (C,) original ids, n for pads
+    mask = adj != PAD
+    safe = jnp.where(mask, adj, 0)
+    nd = dist_ref[safe]
+    hit = jnp.any(jnp.where(mask, nd == level - 1, False), axis=1)
+    mine = dist_ref[nodes]                    # gather through the sigma-sort
+    out_ref[0] = jnp.where((mine == INF) & hit, level, mine)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bfs_step_sell(
+    bucket_adj: tuple[jnp.ndarray, ...],
+    bucket_nodes: tuple[jnp.ndarray, ...],
+    dist: jnp.ndarray,
+    level: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One bottom-up level over width-bucketed, degree-sorted adjacency.
+
+    ``bucket_adj[b]``: (n_slices_b, C, W_b) in-neighbor slabs of the
+    sigma-sorted node order; ``bucket_nodes[b]``: (n_slices_b, C) original
+    node ids (``n`` = dump slot for padding lanes).  ``dist`` has length
+    n + 1 (the dump slot stays INF); returns the updated copy.
+    """
+    for adj, nodes in zip(bucket_adj, bucket_nodes):
+        s, c, w = adj.shape
+        out = pl.pallas_call(
+            _bfs_sell_step_kernel,
+            grid=(s,),
+            in_specs=[
+                pl.BlockSpec((1, c, w), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, c), lambda i: (i, 0)),
+                pl.BlockSpec(dist.shape, lambda i: (0,)),       # resident
+                pl.BlockSpec(level.shape, lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((s, c), dist.dtype),
+            interpret=interpret,
+        )(adj, nodes, dist, level)
+        dist = dist.at[nodes.reshape(-1)].set(out.reshape(-1))
+    return dist.at[-1].set(INF)               # keep the dump slot inert
+
+
+def bfs_sell(
+    bucket_adj: tuple[jnp.ndarray, ...],
+    bucket_nodes: tuple[jnp.ndarray, ...],
+    n_nodes: int,
+    source: int,
+    *,
+    max_levels: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Full BFS over bucketed SELL adjacency; returns (n_nodes,) distances."""
+    dist = jnp.full((n_nodes + 1,), INF, jnp.int32).at[source].set(0)
+    max_levels = max_levels or n_nodes
+    for level in range(1, max_levels + 1):
+        new = bfs_step_sell(
+            bucket_adj, bucket_nodes, dist,
+            jnp.array([level], jnp.int32), interpret=interpret,
+        )
+        if bool(jnp.all(new == dist)):
+            break
+        dist = new
+    return dist[:n_nodes]
+
+
 def bfs(
     adj: jnp.ndarray,
     source: int,

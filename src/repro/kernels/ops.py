@@ -2,25 +2,38 @@
 
 These are the APIs the examples/benchmarks call: they take the host-side
 substrate objects (:class:`repro.sparse.EllpackMatrix`,
-:class:`repro.graphs.EllpackGraph`), move them to device, pad to the chosen
-VL, dispatch the kernel, and trim the result.  ``interpret`` defaults to
-"not on TPU" so the same call sites run interpreted on CPU and compiled on
-real hardware.
+:class:`repro.sparse.SellSlabs`, :class:`repro.graphs.EllpackGraph`), move
+them to device, pad to the chosen VL, dispatch the kernel matching the
+format, and trim the result.  ``interpret`` defaults to "not on TPU" so the
+same call sites run interpreted on CPU and compiled on real hardware.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.graphs.gen import EllpackGraph
+from repro.core.autotune import SellTuneResult, tune_sell_layout
+from repro.graphs.gen import EllpackGraph, graph_to_sell_slabs
 from repro.kernels import bfs as bfs_k
 from repro.kernels import fft as fft_k
 from repro.kernels import pagerank as pr_k
+from repro.kernels import sell as sell_k
 from repro.kernels import spmv as spmv_k
 from repro.kernels.ref import fft_twiddles
-from repro.sparse.formats import CSRMatrix, EllpackMatrix, csr_to_ellpack
+from repro.sparse.formats import (
+    CSRMatrix,
+    EllpackMatrix,
+    SellCSigmaMatrix,
+    SellSlabs,
+    csr_to_ellpack,
+    csr_to_sell_slabs,
+    sell_to_slabs,
+    to_csr,
+)
 
 PAD = -1
 INF = np.iinfo(np.int32).max
@@ -35,20 +48,56 @@ def default_interpret() -> bool:
 # ---------------------------------------------------------------------------
 
 
+def _repack_warn(matrix, vl: int):
+    """Repack a matrix whose slice width disagrees with the requested vl."""
+    warnings.warn(
+        f"matrix packed with C={matrix.c}, requested vl={vl}: repacking "
+        "(pack with the target vl to avoid this cost)",
+        stacklevel=3,
+    )
+    return to_csr(matrix)
+
+
+def _spmv_slabs(slabs: SellSlabs, x, *, w_block: int, interpret: bool) -> jnp.ndarray:
+    return sell_k.spmv_sell(
+        tuple(jnp.asarray(c) for c in slabs.bucket_cols),
+        tuple(jnp.asarray(v) for v in slabs.bucket_vals),
+        tuple(jnp.asarray(r) for r in slabs.bucket_rows),
+        jnp.asarray(x),
+        n_rows=slabs.n_rows,
+        w_block=w_block,
+        interpret=interpret,
+    )
+
+
 def spmv(
-    matrix: EllpackMatrix | CSRMatrix,
+    matrix: CSRMatrix | EllpackMatrix | SellCSigmaMatrix | SellSlabs,
     x: np.ndarray | jnp.ndarray,
     *,
     vl: int = 256,
+    sigma: int | None = None,
     w_block: int = 8,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """y = A @ x with the long-vector SELL/ELLPACK kernel at slice width vl."""
-    if isinstance(matrix, CSRMatrix):
-        matrix = csr_to_ellpack(matrix, c=vl)
-    elif matrix.c != vl:
-        raise ValueError(f"matrix packed with C={matrix.c}, requested vl={vl}")
+    """y = A @ x, dispatching the kernel that matches the matrix format.
+
+    * :class:`CSRMatrix` — packed to width-bucketed SELL slabs at slice
+      width ``vl`` (sigma defaults to 8*vl) and run bucket-by-bucket;
+    * :class:`SellSlabs` / :class:`SellCSigmaMatrix` — bucketed kernel;
+    * :class:`EllpackMatrix` — the uniform-width kernel.
+
+    A pre-packed matrix whose C disagrees with ``vl`` is repacked with a
+    warning instead of failing.
+    """
     interpret = default_interpret() if interpret is None else interpret
+    if not isinstance(matrix, CSRMatrix) and matrix.c != vl:
+        matrix = _repack_warn(matrix, vl)
+    if isinstance(matrix, CSRMatrix):
+        matrix = csr_to_sell_slabs(matrix, c=vl, sigma=sigma)
+    if isinstance(matrix, SellCSigmaMatrix):
+        matrix = sell_to_slabs(matrix)
+    if isinstance(matrix, SellSlabs):
+        return _spmv_slabs(matrix, x, w_block=w_block, interpret=interpret)
     y = spmv_k.spmv_ell(
         jnp.asarray(matrix.cols),
         jnp.asarray(matrix.vals),
@@ -57,6 +106,25 @@ def spmv(
         interpret=interpret,
     )
     return y[: matrix.n_rows]
+
+
+def pack_tuned(
+    matrix: CSRMatrix, machine=None
+) -> tuple[SellSlabs, SellTuneResult]:
+    """Autotune (C, sigma, w_block) for this matrix and pack it.
+
+    The co-design loop as an API: measure the pad_factor every candidate
+    layout would produce on the actual row-length distribution, score
+    SDV-modeled cycles, and return the packed winner plus the tune table.
+    Feed the result straight to :func:`spmv`:
+
+        slabs, tuned = pack_tuned(csr)
+        y = spmv(slabs, x, vl=tuned.c, w_block=tuned.w_block)
+    """
+    tuned = tune_sell_layout(
+        matrix.row_lengths, n_cols=matrix.n_cols, machine=machine
+    )
+    return csr_to_sell_slabs(matrix, c=tuned.c, sigma=tuned.sigma), tuned
 
 
 # ---------------------------------------------------------------------------
@@ -104,14 +172,32 @@ def bfs(
     source: int = 0,
     *,
     vl: int = 256,
+    sigma: int | None = None,
+    layout: str = "ell",
     interpret: bool | None = None,
 ) -> np.ndarray:
-    """BFS distances from ``source`` (INF = unreachable)."""
+    """BFS distances from ``source`` (INF = unreachable).
+
+    ``layout="sell"`` runs the width-bucketed kernel over in-degree-sorted
+    adjacency slabs: skewed-degree graphs stop paying the global max
+    in-degree per node.
+    """
+    if layout not in ("ell", "sell"):
+        raise ValueError(f"unknown layout {layout!r}: expected 'ell' or 'sell'")
     interpret = default_interpret() if interpret is None else interpret
     n = graph.n_nodes
     # Bottom-up expansion needs *in*-neighbors: a node joins the frontier if
     # one of the nodes that point AT it was reached last level.
-    radj = _pad_graph(graph.transpose().adj, vl)
+    rgraph = graph.transpose()
+    if layout == "sell":
+        slabs = graph_to_sell_slabs(rgraph, c=vl, sigma=sigma)
+        dist = bfs_k.bfs_sell(
+            tuple(jnp.asarray(a) for a in slabs.bucket_adj),
+            tuple(jnp.asarray(m) for m in slabs.bucket_nodes),
+            n, source, interpret=interpret,
+        )
+        return np.asarray(dist)
+    radj = _pad_graph(rgraph.adj, vl)
     dist = bfs_k.bfs(jnp.asarray(radj), source, vl=vl, interpret=interpret)
     return np.asarray(dist[:n])
 
@@ -127,11 +213,28 @@ def pagerank(
     damping: float = 0.85,
     iters: int = 20,
     vl: int = 256,
+    sigma: int | None = None,
+    layout: str = "ell",
     interpret: bool | None = None,
 ) -> np.ndarray:
-    """PageRank scores via the pull-style kernel on the reverse graph."""
+    """PageRank scores via the pull-style kernel on the reverse graph.
+
+    ``layout="sell"`` uses in-degree-sorted, width-bucketed reverse
+    adjacency (see :func:`bfs`).
+    """
+    if layout not in ("ell", "sell"):
+        raise ValueError(f"unknown layout {layout!r}: expected 'ell' or 'sell'")
     interpret = default_interpret() if interpret is None else interpret
     n = graph.n_nodes
+    if layout == "sell":
+        slabs = graph_to_sell_slabs(graph.transpose(), c=vl, sigma=sigma)
+        rank = pr_k.pagerank_sell(
+            tuple(jnp.asarray(a) for a in slabs.bucket_adj),
+            tuple(jnp.asarray(m) for m in slabs.bucket_nodes),
+            jnp.asarray(graph.out_degree.astype(np.float64)),
+            n, damping=damping, iters=iters, interpret=interpret,
+        )
+        return np.asarray(rank)
     radj = _pad_graph(graph.transpose().adj, vl)
     deg = jnp.asarray(
         np.pad(graph.out_degree, (0, radj.shape[0] - n)).astype(np.float64)

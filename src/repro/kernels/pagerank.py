@@ -59,6 +59,83 @@ def pagerank_step(
     )(radj, contrib, consts)
 
 
+def _pr_sell_step_kernel(radj_ref, contrib_ref, consts_ref, out_ref):
+    radj = radj_ref[0]                        # (C, W_b)
+    mask = radj != PAD
+    safe = jnp.where(mask, radj, 0)
+    g = jnp.where(mask, contrib_ref[safe], 0.0)
+    pulled = jnp.sum(g, axis=1)
+    base, damping, dangling_term = consts_ref[0], consts_ref[1], consts_ref[2]
+    out_ref[0] = base + damping * (pulled + dangling_term)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pagerank_step_sell(
+    bucket_radj: tuple[jnp.ndarray, ...],
+    bucket_nodes: tuple[jnp.ndarray, ...],
+    contrib: jnp.ndarray,
+    consts: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One power step over width-bucketed, in-degree-sorted adjacency.
+
+    ``contrib`` has length n + 1 (dump slot = 0); the per-bucket results are
+    scattered back to original node order through ``bucket_nodes`` (padding
+    lanes land in the dump slot).  Returns the new (n + 1,) rank vector.
+    """
+    rank = jnp.zeros_like(contrib)
+    for radj, nodes in zip(bucket_radj, bucket_nodes):
+        s, c, w = radj.shape
+        out = pl.pallas_call(
+            _pr_sell_step_kernel,
+            grid=(s,),
+            in_specs=[
+                pl.BlockSpec((1, c, w), lambda i: (i, 0, 0)),
+                pl.BlockSpec(contrib.shape, lambda i: (0,)),    # resident
+                pl.BlockSpec(consts.shape, lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((s, c), contrib.dtype),
+            interpret=interpret,
+        )(radj, contrib, consts)
+        rank = rank.at[nodes.reshape(-1)].set(out.reshape(-1))
+    return rank.at[-1].set(0.0)               # keep the dump slot inert
+
+
+def pagerank_sell(
+    bucket_radj: tuple[jnp.ndarray, ...],
+    bucket_nodes: tuple[jnp.ndarray, ...],
+    out_degree: jnp.ndarray,
+    n_nodes: int,
+    *,
+    damping: float = 0.85,
+    iters: int = 20,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Full PageRank over bucketed SELL reverse adjacency.
+
+    ``out_degree`` is the (n_nodes,) degree vector in *original* node order;
+    returns (n_nodes,) ranks in original order.
+    """
+    n = n_nodes
+    dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    rank = jnp.full((n,), 1.0 / n, dtype)
+    deg = out_degree.astype(dtype)
+    zero = jnp.zeros((1,), dtype)
+    for _ in range(iters):
+        contrib = jnp.where(deg > 0, rank / jnp.maximum(deg, 1), 0.0)
+        dangling = jnp.sum(jnp.where(deg == 0, rank, 0.0))
+        consts = jnp.stack([(1.0 - damping) / n, damping, dangling / n]).astype(dtype)
+        new = pagerank_step_sell(
+            bucket_radj, bucket_nodes,
+            jnp.concatenate([contrib, zero]),   # dump slot contributes 0
+            consts, interpret=interpret,
+        )
+        rank = new[:n]
+    return rank
+
+
 def pagerank(
     radj: jnp.ndarray,
     out_degree: jnp.ndarray,

@@ -1,21 +1,38 @@
-"""Sparse-matrix substrate: CSR / ELLPACK / SELL-C-sigma formats and the
-CAGE10-like generator used by the paper's SpMV evaluation."""
+"""Sparse-matrix substrate: CSR / ELLPACK / SELL-C-sigma formats (including
+the device-executable width-bucketed :class:`SellSlabs`) and the CAGE10-like
+generator used by the paper's SpMV evaluation."""
 from repro.sparse.formats import (
     CSRMatrix,
     EllpackMatrix,
     SellCSigmaMatrix,
+    SellSlabs,
     cage10_like,
     csr_from_dense,
     csr_to_dense,
+    csr_to_ellpack,
+    csr_to_sell,
+    csr_to_sell_slabs,
+    ellpack_to_csr,
     random_csr,
+    sell_slabs_to_csr,
+    sell_to_slabs,
+    to_csr,
 )
 
 __all__ = [
     "CSRMatrix",
     "EllpackMatrix",
     "SellCSigmaMatrix",
+    "SellSlabs",
     "cage10_like",
     "csr_from_dense",
     "csr_to_dense",
+    "csr_to_ellpack",
+    "csr_to_sell",
+    "csr_to_sell_slabs",
+    "ellpack_to_csr",
     "random_csr",
+    "sell_slabs_to_csr",
+    "sell_to_slabs",
+    "to_csr",
 ]

@@ -1,0 +1,259 @@
+"""SELL-C-sigma coverage: packers, bucketed slabs, device kernels, tuner.
+
+Property tests (hypothesis, degrading to the deterministic fixed-example
+grid via tests/_hypothesis_fallback.py) assert that every layout —
+ELLPACK, ragged SELL, width-bucketed SELL slabs — computes the same matvec
+as the CSR reference across a (C, sigma, skew) grid, including empty rows
+and single-slice matrices; plus the ops-level dispatch, the repack-instead-
+of-raise path, the (C, sigma) tuner, and the sigma-sorted graph kernels.
+"""
+import warnings
+
+import numpy as np
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro.core.autotune import measured_pad_factor, tune_sell_layout
+from repro.graphs import gen as G
+from repro.kernels import ops
+from repro.sparse import formats as F
+
+RNG = np.random.default_rng(99)
+
+
+# ---------------------------------------------------------------------------
+# Layout equivalence: every format's matvec == CSR reference
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(min_value=1, max_value=90),
+    c=st.sampled_from([4, 16, 32]),
+    sigma_factor=st.sampled_from([1, 4, 8]),
+    skew=st.sampled_from([0.0, 0.8, 1.6]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_all_layouts_matvec_match_csr(n, c, sigma_factor, skew, seed):
+    csr = F.random_csr(n, n + 2, 4.0, seed=seed, skew=skew)
+    x = np.random.default_rng(seed).standard_normal(n + 2)
+    want = csr.matvec(x)
+    ell = F.csr_to_ellpack(csr, c=c)
+    sell = F.csr_to_sell(csr, c=c, sigma=sigma_factor * c)
+    slabs = F.csr_to_sell_slabs(csr, c=c, sigma=sigma_factor * c)
+    np.testing.assert_allclose(ell.matvec(x), want, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(sell.matvec(x), want, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(slabs.matvec(x), want, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(
+        F.sell_to_slabs(sell).matvec(x), want, rtol=1e-12, atol=1e-12
+    )
+
+
+def test_empty_rows_and_single_slice():
+    dense = np.zeros((6, 5))
+    dense[0, 1] = 2.0
+    dense[3, [0, 2, 4]] = [1.0, -1.5, 3.0]   # rows 1,2,4,5 empty
+    csr = F.csr_from_dense(dense)
+    x = RNG.standard_normal(5)
+    want = dense @ x
+    for c, sigma in [(4, 8), (8, 8), (16, 16)]:  # c=8,16 > n_rows: single slice
+        slabs = F.csr_to_sell_slabs(csr, c=c, sigma=sigma)
+        np.testing.assert_allclose(slabs.matvec(x), want, atol=1e-12)
+        got = np.asarray(ops.spmv(slabs, x, vl=c))
+        np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+def test_all_empty_matrix():
+    csr = F.csr_from_dense(np.zeros((5, 4)))
+    slabs = F.csr_to_sell_slabs(csr, c=4)
+    x = RNG.standard_normal(4)
+    np.testing.assert_allclose(slabs.matvec(x), np.zeros(5), atol=1e-15)
+    np.testing.assert_allclose(np.asarray(ops.spmv(slabs, x, vl=4)), np.zeros(5), atol=1e-15)
+
+
+# ---------------------------------------------------------------------------
+# Format round trips
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(min_value=1, max_value=70),
+    c=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=15, deadline=None)
+def test_to_csr_round_trips(n, c, seed):
+    csr = F.random_csr(n, n, 3.0, seed=seed, skew=1.0)
+    for packed in (
+        F.csr_to_ellpack(csr, c=c),
+        F.csr_to_sell_slabs(csr, c=c),
+        F.csr_to_sell(csr, c=c),
+    ):
+        back = F.to_csr(packed)
+        np.testing.assert_array_equal(back.indptr, csr.indptr)
+        np.testing.assert_array_equal(back.indices, csr.indices)
+        np.testing.assert_allclose(back.data, csr.data)
+
+
+# ---------------------------------------------------------------------------
+# Device kernel: bucketed SELL through pallas_call
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(min_value=1, max_value=120),
+    vl=st.sampled_from([8, 16, 64]),
+    skew=st.sampled_from([0.0, 1.2]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=15, deadline=None)
+def test_spmv_sell_kernel_vs_csr(n, vl, skew, seed):
+    m = F.random_csr(n, n + 3, 5.0, seed=seed, skew=skew)
+    x = np.random.default_rng(seed).standard_normal(n + 3)
+    got = np.asarray(ops.spmv(m, x, vl=vl))       # CSR dispatches to slabs
+    np.testing.assert_allclose(got, m.matvec(x), rtol=1e-10, atol=1e-10)
+
+
+def test_spmv_sell_cage10_matches_csr():
+    """Acceptance: bucketed SELL through pallas on the paper's input."""
+    m = F.cage10_like(seed=0)
+    slabs, tuned = ops.pack_tuned(m)
+    assert slabs.pad_factor < 2.0                  # sigma-sort earns its keep
+    x = RNG.standard_normal(m.n_cols)
+    got = np.asarray(ops.spmv(slabs, x, vl=tuned.c, w_block=tuned.w_block))
+    np.testing.assert_allclose(got, m.matvec(x), rtol=1e-10, atol=1e-10)
+
+
+def test_spmv_repacks_on_vl_mismatch_instead_of_raising():
+    m = F.random_csr(100, 100, 5.0, seed=0)
+    ell = F.csr_to_ellpack(m, c=32)
+    x = RNG.standard_normal(100)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        got = np.asarray(ops.spmv(ell, x, vl=64))
+    assert any("repack" in str(w.message) for w in caught)
+    np.testing.assert_allclose(got, m.matvec(x), rtol=1e-10, atol=1e-10)
+
+
+def test_bucketed_sell_pads_less_than_ellpack_on_skew():
+    """Acceptance: pad_factor(bucketed SELL) < pad_factor(ELLPACK) on skew."""
+    csr = F.random_csr(2000, 2000, 8.0, seed=3, skew=1.2)
+    ell = F.csr_to_ellpack(csr, c=128)
+    slabs = F.csr_to_sell_slabs(csr, c=128, sigma=1024)
+    assert slabs.pad_factor < ell.pad_factor / 2   # >= 2x padded-FLOP cut
+    assert slabs.n_buckets <= int(np.log2(ell.width)) + 2
+
+
+# ---------------------------------------------------------------------------
+# Tuner
+# ---------------------------------------------------------------------------
+
+
+def test_measured_pad_factor_matches_packer():
+    csr = F.random_csr(500, 500, 6.0, seed=5, skew=1.0)
+    for c, sigma in [(16, 64), (64, 512)]:
+        slabs = F.csr_to_sell_slabs(csr, c=c, sigma=sigma)
+        assert measured_pad_factor(csr.row_lengths, c, sigma) == pytest.approx(
+            slabs.pad_factor
+        )
+
+
+def test_tune_sell_layout_picks_feasible_winner():
+    csr = F.random_csr(4000, 4000, 8.0, seed=1, skew=1.3)
+    tuned = tune_sell_layout(csr.row_lengths, n_cols=csr.n_cols)
+    assert tuned.c in {r[0] for r in tuned.table}
+    assert tuned.cycles == min(r[3] for r in tuned.table)
+    assert 1.0 <= tuned.pad_factor < 10.0
+    assert tuned.w_block >= 1
+    # sigma-sorting a skewed distribution must beat the unsorted worst case
+    worst_pf = max(r[2] for r in tuned.table)
+    assert tuned.pad_factor <= worst_pf
+
+
+# ---------------------------------------------------------------------------
+# Graph kernels on the sigma-sorted layout
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vl", [32, 64])
+def test_bfs_sell_matches_reference(vl):
+    g = G.rmat_graph(n_nodes=256, avg_degree=6, seed=11)
+    want = G.bfs_reference(g, 1)
+    got = ops.bfs(g, 1, vl=vl, layout="sell")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bfs_sell_unreachable_stay_inf():
+    adj = np.full((8, 2), -1, np.int32)
+    adj[0, 0] = 1
+    g = G.EllpackGraph(adj=adj, n_nodes=8)
+    got = ops.bfs(g, 0, vl=8, layout="sell")
+    assert got[0] == 0 and got[1] == 1
+    assert all(got[i] == G.INF for i in range(2, 8))
+
+
+@pytest.mark.parametrize("vl", [32, 128])
+def test_pagerank_sell_matches_reference(vl):
+    g = G.random_graph(n_nodes=320, avg_degree=5, seed=vl)
+    want = G.pagerank_reference(g, iters=12)
+    got = ops.pagerank(g, iters=12, vl=vl, layout="sell")
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+def test_pagerank_sell_mass_conserved_on_skewed_graph():
+    g = G.rmat_graph(n_nodes=512, avg_degree=8, seed=2)
+    got = ops.pagerank(g, iters=15, vl=128, layout="sell")
+    assert got.sum() == pytest.approx(1.0, rel=1e-9)
+    assert (got > 0).all()
+
+
+def test_graph_sell_slabs_pad_less_on_skewed_degrees():
+    g = G.rmat_graph(n_nodes=1 << 10, avg_degree=8, seed=0)
+    rg = g.transpose()
+    slabs = G.graph_to_sell_slabs(rg, c=64, sigma=512)
+    ell_entries = rg.adj.shape[0] * rg.adj.shape[1]
+    assert slabs.padded_entries < ell_entries
+    assert slabs.n_edges == g.n_edges
+
+
+# ---------------------------------------------------------------------------
+# Vectorized generators
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(min_value=1, max_value=200),
+    skew=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=15, deadline=None)
+def test_random_csr_invariants(n, skew, seed):
+    m = F.random_csr(n, n, 4.0, seed=seed, skew=skew)
+    assert (m.row_lengths >= 1).all()
+    rows = np.repeat(np.arange(n), m.row_lengths)
+    # strictly increasing (hence distinct, sorted) within every row
+    brk = np.nonzero(np.diff(rows) == 0)[0]
+    assert (np.diff(m.indices.astype(np.int64))[brk] > 0).all()
+    assert (m.indices >= 0).all() and (m.indices < n).all()
+
+
+def test_random_csr_skew_is_heavy_tailed():
+    m = F.random_csr(5000, 5000, 8.0, seed=0, skew=1.5)
+    lengths = m.row_lengths
+    assert lengths.max() >= 5 * lengths.mean()
+    assert abs(lengths.mean() - 8.0) < 2.5
+
+
+def test_generators_scale_without_python_loops():
+    """1e5-row generation + packing: array ops, not minutes of row loops.
+
+    The bound is deliberately loose (the vectorized path takes well under a
+    second; the old per-row loops took minutes) so a loaded CI box can't
+    flake it.
+    """
+    import time
+
+    t0 = time.perf_counter()
+    m = F.random_csr(100_000, 100_000, 10.0, seed=0, skew=1.0)
+    F.csr_to_sell_slabs(m, c=256)
+    assert time.perf_counter() - t0 < 60.0
