@@ -1,15 +1,19 @@
 """Paper Fig 5: execution time vs bandwidth limit, normalized to the
 1 B/cycle run of each series, plus plateau-bandwidth summary per series.
+
+``rows(result=...)`` consumes a precomputed bandwidth ``SweepResult``
+(normally the ``paper-fig5`` campaign out of the BENCH_sweeps.json store).
 """
-from repro.core.sweep import bandwidth_sweep, plateau_bandwidth
+from repro.core.sweep import SweepResult, bandwidth_sweep, plateau_bandwidth
+from repro.core.vconfig import series_label
 
 
-def rows():
-    res = bandwidth_sweep()
+def rows(result: SweepResult | None = None):
+    res = result if result is not None else bandwidth_sweep()
     norm = res.normalized(anchor=1)
     for kernel, per_vl in norm.items():
         for vl, curve in per_vl.items():
-            series = "scalar" if vl == 1 else f"vl{vl}"
+            series = series_label(vl)
             for knob, rel in sorted(curve.items()):
                 yield {
                     "table": "fig5_bandwidth",
@@ -27,8 +31,8 @@ def rows():
             }
 
 
-def main():
-    for r in rows():
+def main(precomputed: SweepResult | None = None):
+    for r in rows(precomputed):
         print(f"{r['table']},{r['kernel']},{r['series']},{r['knob']},"
               f"{r['normalized_time']:.4f}")
 

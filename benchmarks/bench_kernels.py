@@ -82,6 +82,34 @@ def collect() -> dict:
     }
 
 
+def campaign_records(table: dict | None = None) -> list[dict]:
+    """The microbench table in the BENCH_sweeps.json record schema, so the
+    measured wall times can be stored next to modeled campaign cycles (see
+    ``repro.core.campaign.CampaignResult.records``)."""
+    table = table if table is not None else collect()
+    records = []
+    for name, entry in table.items():
+        kernel = next((k for k in ("pagerank", "spmv", "bfs", "fft")
+                       if name.startswith(k)), name.split("_", 1)[0])
+        vl = next((int(tok[2:]) for tok in name.split("_") if
+                   tok.startswith("vl") and tok[2:].isdigit()), 256)
+        rec = {
+            "campaign": "bench-kernels",
+            "machine": "pallas-interpret",
+            "kernel": kernel,
+            "vl": vl,
+            "extra_latency": 0,
+            "bw_limit": 0.0,
+            "us_per_call": entry["us_per_call"],
+            "problem": name,
+            "source": "measured-interpret",
+        }
+        if "pad_factor" in entry:
+            rec["pad_factor"] = entry["pad_factor"]
+        records.append(rec)
+    return records
+
+
 def main(precomputed: dict | None = None):
     table = precomputed if precomputed is not None else collect()
     for name, entry in table.items():

@@ -1,12 +1,16 @@
 """Paper Fig 3: execution time vs added memory latency, per kernel/series.
 
 CSV columns: kernel, series, extra_latency_cycles, cycles, us_at_50MHz.
+
+``rows(result=...)`` consumes a precomputed ``SweepResult`` (normally the
+``paper-fig3`` campaign out of the BENCH_sweeps.json store) so the table is a
+projection of the persisted cube; without one it runs the sweep itself.
 """
-from repro.core.sweep import latency_sweep
+from repro.core.sweep import SweepResult, latency_sweep
 
 
-def rows():
-    res = latency_sweep()
+def rows(result: SweepResult | None = None):
+    res = result if result is not None else latency_sweep()
     for kernel, series, knob, cycles in res.rows():
         yield {
             "table": "fig3_latency",
@@ -18,8 +22,8 @@ def rows():
         }
 
 
-def main():
-    for r in rows():
+def main(precomputed: SweepResult | None = None):
+    for r in rows(precomputed):
         print(f"{r['table']},{r['kernel']},{r['series']},{r['knob']},"
               f"{r['cycles']:.0f},{r['us_at_50MHz']:.1f}")
 

@@ -1,35 +1,39 @@
 """Paper Fig 4: slowdown tables (normalized to the +0-latency run), plus the
 quantitative anchor comparison against the paper's quoted SpMV cells.
+
+``rows(result=...)`` consumes a precomputed latency ``SweepResult`` (normally
+the ``paper-fig4`` campaign out of the BENCH_sweeps.json store).
 """
 from repro.core.sweep import (
     PAPER_SPMV_ANCHORS,
+    SweepResult,
     latency_sweep,
     slowdown_tables,
     spmv_anchor_errors,
 )
+from repro.core.vconfig import series_label
 
 
-def rows():
-    tables = slowdown_tables(latency_sweep())
+def rows(result: SweepResult | None = None):
+    res = result if result is not None else latency_sweep()
+    tables = slowdown_tables(res)
     for kernel, per_vl in tables.items():
         for vl, curve in per_vl.items():
-            series = "scalar" if vl == 1 else f"vl{vl}"
             for knob, slowdown in sorted(curve.items()):
                 yield {
                     "table": "fig4_slowdown",
                     "kernel": kernel,
-                    "series": series,
+                    "series": series_label(vl),
                     "knob": knob,
                     "slowdown": slowdown,
                 }
     errors = spmv_anchor_errors(tables)
     for (vl, lat), target in PAPER_SPMV_ANCHORS.items():
-        series = "scalar" if vl == 1 else f"vl{vl}"
         got = tables["spmv"][vl][lat]
         yield {
             "table": "fig4_anchor",
             "kernel": "spmv",
-            "series": series,
+            "series": series_label(vl),
             "knob": lat,
             "slowdown": got,
             "paper": target,
@@ -37,8 +41,8 @@ def rows():
         }
 
 
-def main():
-    for r in rows():
+def main(precomputed: SweepResult | None = None):
+    for r in rows(precomputed):
         extra = f",{r['paper']},{r['rel_err']:.3f}" if "paper" in r else ",,"
         print(f"{r['table']},{r['kernel']},{r['series']},{r['knob']},"
               f"{r['slowdown']:.3f}{extra}")

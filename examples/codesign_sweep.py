@@ -1,20 +1,23 @@
 """Co-design sweep: the paper's full evaluation (Figs 3/4/5) + the TPU
 block-shape autotuner built on the same machinery.
 
+The figure grids run as named campaigns (one vectorized cube each) and can be
+persisted to the schema-versioned sweeps store with ``--store``.
+
     PYTHONPATH=src python examples/codesign_sweep.py [--csv out.csv]
+                                                     [--store BENCH_sweeps.json]
 """
 import argparse
 
-from repro.core import MachineParams, tpu_v5e_machine
+from repro.core import MachineParams, SweepStore, run_campaign, tpu_v5e_machine
 from repro.core.autotune import tune_vl
 from repro.core.sweep import (
     KERNELS,
-    bandwidth_sweep,
     check_bandwidth_claim,
     check_latency_claim,
-    latency_sweep,
     slowdown_tables,
     spmv_anchor_errors,
+    sweep_result_from_campaign,
 )
 from repro.core.traffic import TRACE_BUILDERS
 
@@ -22,11 +25,20 @@ from repro.core.traffic import TRACE_BUILDERS
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--csv", default=None)
+    ap.add_argument("--store", default=None,
+                    help="persist the campaign cubes to this sweeps store")
     args = ap.parse_args()
 
-    lat = latency_sweep()
+    fig3 = run_campaign("paper-fig3")
+    fig5 = run_campaign("paper-fig5")
+    if args.store:
+        store = SweepStore(args.store)
+        store.put(fig3)
+        store.put(fig5)
+        print(f"wrote {store.save()}")
+    lat = sweep_result_from_campaign(fig3)
     tables = slowdown_tables(lat)
-    bw = bandwidth_sweep()
+    bw = sweep_result_from_campaign(fig5)
 
     print("== Fig 4: slowdown tables (rows = +latency, cols = series) ==")
     for kernel in KERNELS:

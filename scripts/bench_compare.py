@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_kernels.json against the committed baseline.
+
+    python scripts/bench_compare.py benchmarks/BENCH_baseline.json \
+        BENCH_kernels.json [--tolerance 0.25] [--time-tolerance 0.75]
+
+Prints a readable per-benchmark delta table and exits 1 when any tracked
+metric regressed beyond tolerance or a baselined benchmark disappeared.
+Tracked metrics: ``pad_factor`` (deterministic layout quality — gated at
+``--tolerance``) and ``us_per_call`` (interpret-mode wall time — gated at
+``--time-tolerance``, which defaults to ``--tolerance`` but usually needs
+more headroom on shared CI runners).  Both metrics are higher-is-worse, so
+only increases beyond tolerance fail; a large *improvement* is flagged
+``IMPROVED`` (non-fatal) as a nudge to re-baseline so the win is locked in.
+
+To re-baseline after an intentional change, regenerate and commit::
+
+    PYTHONPATH=src python -m benchmarks.run --kernels-only
+    cp BENCH_kernels.json benchmarks/BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+METRICS = ("us_per_call", "pad_factor")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        table = json.load(f)
+    if not isinstance(table, dict):
+        raise SystemExit(f"{path}: expected a name->metrics object")
+    return table
+
+
+def compare(baseline: dict, current: dict, tolerance: float,
+            time_tolerance: float) -> tuple[list[tuple], bool]:
+    """Rows of (name, metric, base, cur, delta_frac, status); ok flag."""
+    rows = []
+    ok = True
+    tol = {"us_per_call": time_tolerance, "pad_factor": tolerance}
+    for name in sorted(set(baseline) | set(current)):
+        if name not in current:
+            rows.append((name, "-", "-", "-", None, "GONE"))
+            ok = False
+            continue
+        if name not in baseline:
+            rows.append((name, "-", "-", "-", None, "NEW"))
+            continue
+        for metric in METRICS:
+            if metric not in baseline[name]:
+                continue
+            base = float(baseline[name][metric])
+            cur = float(current[name].get(metric, float("nan")))
+            delta = (cur - base) / base if base else float("inf")
+            # higher-is-worse metrics: gate increases only; big decreases
+            # are improvements worth re-baselining, not build failures
+            if delta > tol[metric] or delta != delta:    # regression or NaN
+                status, ok = "FAIL", False
+            elif delta < -tol[metric]:
+                status = "IMPROVED"
+            else:
+                status = "OK"
+            rows.append((name, metric, base, cur, delta, status))
+    return rows, ok
+
+
+def print_table(rows: list[tuple]) -> None:
+    header = f"{'benchmark':<32} {'metric':<12} {'baseline':>10} {'current':>10} {'delta':>8}  status"
+    print(header)
+    print("-" * len(header))
+    for name, metric, base, cur, delta, status in rows:
+        if delta is None:
+            print(f"{name:<32} {metric:<12} {str(base):>10} {str(cur):>10} {'':>8}  {status}")
+        else:
+            print(f"{name:<32} {metric:<12} {base:>10.4g} {cur:>10.4g} "
+                  f"{delta:>+7.1%}  {status}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("current", help="freshly generated BENCH_kernels.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative tolerance for deterministic metrics "
+                         "(pad_factor); default 0.25")
+    ap.add_argument("--time-tolerance", type=float, default=None,
+                    help="relative tolerance for us_per_call wall times "
+                         "(defaults to --tolerance; raise on noisy runners)")
+    args = ap.parse_args(argv)
+    time_tol = args.time_tolerance if args.time_tolerance is not None else args.tolerance
+
+    rows, ok = compare(load(args.baseline), load(args.current),
+                       args.tolerance, time_tol)
+    print_table(rows)
+    if not ok:
+        print(f"\nREGRESSION: metric rose beyond tolerance "
+              f"(pad {args.tolerance:.0%} / time {time_tol:.0%}) or a "
+              f"baselined benchmark vanished.\n"
+              f"If intentional, re-baseline: cp {args.current} {args.baseline}")
+        return 1
+    if any(r[-1] == "IMPROVED" for r in rows):
+        print(f"\nno regressions; improvements beyond tolerance detected — "
+              f"lock them in: cp {args.current} {args.baseline}")
+    else:
+        print("\nall benchmarks within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

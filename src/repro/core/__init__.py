@@ -6,9 +6,21 @@
 - :mod:`repro.core.traffic`  — transaction traces of the four paper kernels
 - :mod:`repro.core.sweep`    — the §4 evaluation harness (Figs 3/4/5) and
   machine-checkable claims
+- :mod:`repro.core.campaign` — named, composable sweep campaigns: vectorized
+  cube evaluation + the schema-versioned BENCH_sweeps.json store
 - :mod:`repro.core.autotune` — the co-design loop: SDV-modeled block-shape
   selection for the TPU kernels
 """
+from repro.core.campaign import (
+    BW_UNLIMITED,
+    CampaignResult,
+    CampaignSpec,
+    SweepStore,
+    campaign_names,
+    get_campaign,
+    register_campaign,
+    run_campaign,
+)
 from repro.core.autotune import (
     SellTuneResult,
     TuneResult,
@@ -16,7 +28,13 @@ from repro.core.autotune import (
     tune_sell_layout,
     tune_vl,
 )
-from repro.core.vconfig import PAPER_VLS, SCALAR_VL, VectorConfig, sweep_configs
+from repro.core.vconfig import (
+    PAPER_VLS,
+    SCALAR_VL,
+    VectorConfig,
+    series_label,
+    sweep_configs,
+)
 from repro.core.sdv import (
     MachineParams,
     MemOp,
@@ -24,11 +42,22 @@ from repro.core.sdv import (
     RunResult,
     SDVMachine,
     Trace,
+    evaluate_cube,
     fpga_sdv_machine,
     tpu_v5e_machine,
 )
 
 __all__ = [
+    "BW_UNLIMITED",
+    "CampaignResult",
+    "CampaignSpec",
+    "SweepStore",
+    "campaign_names",
+    "get_campaign",
+    "register_campaign",
+    "run_campaign",
+    "evaluate_cube",
+    "series_label",
     "SellTuneResult",
     "TuneResult",
     "measured_pad_factor",

@@ -1,0 +1,484 @@
+"""Sweep campaigns — the paper's evaluation grid as a first-class batch job.
+
+The paper's contribution *is* a grid: four kernels swept over vector length x
+memory latency x bandwidth (Figs 3-5).  A :class:`CampaignSpec` names one such
+cube — kernels, VLs, the two SDV knobs, and one or more machines — and
+:func:`run_campaign` evaluates the whole thing in a single broadcasted call
+per machine (:func:`repro.core.sdv.evaluate_cube`) instead of thousands of
+Python-level ``SDVMachine(...).run(trace)`` invocations.  Results persist in a
+schema-versioned JSON store (``BENCH_sweeps.json``, :class:`SweepStore`) whose
+flat record schema also carries measured Pallas interpret-mode timings, so
+modeled and measured numbers live side by side and CI can diff them across
+PRs.
+
+Named campaigns:
+
+* ``paper-fig3`` / ``paper-fig4`` — latency sweep of §4.1 (fig4 is the same
+  cube, normalized at presentation time)
+* ``paper-fig5``                  — bandwidth sweep of §4.2
+* ``machine-compare``             — the Lee-et-al-style cross-machine run:
+  DDR-like vs HBM-like vs TPU-v5e parameter sets over the same kernel grid
+
+plus arbitrary user-defined cubes via :class:`CampaignSpec` directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import warnings
+from typing import Callable, Iterator, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.sdv import MachineParams, evaluate_cube, PAPER_BANDWIDTHS, PAPER_LATENCIES
+from repro.core.traffic import TRACE_BUILDERS, build_trace_grid
+from repro.core.vconfig import PAPER_VLS, SCALAR_VL
+
+#: Version stamp of the ``BENCH_sweeps.json`` document layout.  Bump on any
+#: backwards-incompatible change to the spec/cube/record encoding.
+SCHEMA_VERSION = 1
+
+#: Bandwidth sentinel: "leave this machine's own Bandwidth Limiter setting
+#: alone" (i.e. run at whatever ``bw_limit_bytes_per_cycle`` the machine
+#: already has — its peak, unless the caller throttled it).  Lets one
+#: campaign span machines with very different absolute peak bandwidths.
+BW_UNLIMITED = 0.0
+
+#: The paper's series: scalar baseline + the studied vector lengths.
+PAPER_SERIES: tuple[int, ...] = (SCALAR_VL,) + PAPER_VLS
+
+KERNELS: tuple[str, ...] = tuple(TRACE_BUILDERS)
+
+
+# ---------------------------------------------------------------------------
+# Campaign specification
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    """One named evaluation cube: kernels x VLs x latencies x bandwidths x
+    machines.  Axis order in the result cube is (machine, kernel, vl,
+    latency, bandwidth)."""
+
+    name: str
+    kernels: tuple[str, ...] = KERNELS
+    vls: tuple[int, ...] = PAPER_SERIES
+    latencies: tuple[int, ...] = PAPER_LATENCIES
+    bandwidths: tuple[float, ...] = (BW_UNLIMITED,)
+    machines: tuple[MachineParams, ...] = (MachineParams(),)
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        unknown = [k for k in self.kernels if k not in TRACE_BUILDERS]
+        if unknown:
+            raise ValueError(f"unknown kernels {unknown}; have {sorted(TRACE_BUILDERS)}")
+        for axis in ("kernels", "vls", "latencies", "bandwidths", "machines"):
+            if not getattr(self, axis):
+                raise ValueError(f"campaign {self.name!r}: axis {axis!r} is empty")
+
+    @property
+    def shape(self) -> tuple[int, int, int, int, int]:
+        return (len(self.machines), len(self.kernels), len(self.vls),
+                len(self.latencies), len(self.bandwidths))
+
+    @property
+    def n_points(self) -> int:
+        return int(np.prod(self.shape))
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["machines"] = [dataclasses.asdict(m) for m in self.machines]
+        return d
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "CampaignSpec":
+        d = dict(d)
+        d["machines"] = tuple(MachineParams(**m) for m in d["machines"])
+        for axis in ("kernels", "vls", "latencies", "bandwidths"):
+            d[axis] = tuple(d[axis])
+        return cls(**d)
+
+
+def resolve_bandwidth(machine: MachineParams, bw: float) -> float:
+    """Map the :data:`BW_UNLIMITED` sentinel to the machine's own limiter."""
+    return float(machine.bw_limit_bytes_per_cycle) if bw <= 0 else float(bw)
+
+
+# ---------------------------------------------------------------------------
+# Campaign result
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    """The evaluated cube plus optional measured interpret-mode timings."""
+
+    spec: CampaignSpec
+    cycles: np.ndarray                      # (machine, kernel, vl, lat, bw)
+    measured: list[dict] = dataclasses.field(default_factory=list)
+
+    def curves(self, knob: str = "extra_latency", machine: int = 0
+               ) -> dict[str, dict[int, dict[int, float]]]:
+        """Nested ``kernel -> vl -> knob_value -> cycles`` dict, the layout
+        :class:`repro.core.sweep.SweepResult` and the claim checkers consume.
+        Requires the *other* knob axis to be a singleton."""
+        s = self.spec
+        if knob == "extra_latency":
+            if len(s.bandwidths) != 1:
+                raise ValueError(
+                    f"{s.name}: latency curves need a singleton bandwidth axis, "
+                    f"got {len(s.bandwidths)}")
+            values, pick = s.latencies, lambda ki, vi, ni: self.cycles[machine, ki, vi, ni, 0]
+        elif knob == "bw_limit":
+            if len(s.latencies) != 1:
+                raise ValueError(
+                    f"{s.name}: bandwidth curves need a singleton latency axis, "
+                    f"got {len(s.latencies)}")
+            values, pick = s.bandwidths, lambda ki, vi, ni: self.cycles[machine, ki, vi, 0, ni]
+        else:
+            raise ValueError(f"unknown knob {knob!r}")
+        return {
+            kernel: {
+                vl: {val: float(pick(ki, vi, ni)) for ni, val in enumerate(values)}
+                for vi, vl in enumerate(s.vls)
+            }
+            for ki, kernel in enumerate(s.kernels)
+        }
+
+    def records(self) -> Iterator[dict]:
+        """Flat modeled records + the measured records, one schema."""
+        s = self.spec
+        for mi, m in enumerate(s.machines):
+            for ki, kernel in enumerate(s.kernels):
+                for vi, vl in enumerate(s.vls):
+                    for li, lat in enumerate(s.latencies):
+                        for bi, bw in enumerate(s.bandwidths):
+                            yield {
+                                "campaign": s.name,
+                                "machine": m.name,
+                                "kernel": kernel,
+                                "vl": vl,
+                                "extra_latency": lat,
+                                "bw_limit": resolve_bandwidth(m, bw),
+                                "cycles": float(self.cycles[mi, ki, vi, li, bi]),
+                                "source": "modeled",
+                            }
+        yield from self.measured
+
+    def to_json(self) -> dict:
+        return {
+            "spec": self.spec.to_json(),
+            "cycles": self.cycles.tolist(),
+            "measured": self.measured,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "CampaignResult":
+        spec = CampaignSpec.from_json(d["spec"])
+        cycles = np.asarray(d["cycles"], dtype=np.float64).reshape(spec.shape)
+        return cls(spec=spec, cycles=cycles, measured=list(d.get("measured", [])))
+
+
+def run_campaign(
+    spec: CampaignSpec | str,
+    measure: bool = False,
+    measure_reps: int = 1,
+) -> CampaignResult:
+    """Evaluate a campaign cube — one vectorized call per machine.
+
+    ``measure=True`` additionally times the real Pallas kernels (interpret
+    mode, small problems) at the campaign's VLs and attaches the timings as
+    ``source="measured-interpret"`` records in the same store schema.
+    """
+    if isinstance(spec, str):
+        spec = get_campaign(spec)
+    traces = build_trace_grid(spec.kernels, spec.vls)
+    per_machine = []
+    for m in spec.machines:
+        bws = [resolve_bandwidth(m, b) for b in spec.bandwidths]
+        cube = evaluate_cube(traces, m, spec.latencies, bws)
+        per_machine.append(cube.reshape(
+            len(spec.kernels), len(spec.vls),
+            len(spec.latencies), len(spec.bandwidths)))
+    result = CampaignResult(spec=spec, cycles=np.stack(per_machine))
+    if measure:
+        result.measured = measure_interpret(
+            spec.kernels, vls=measure_vls(spec.vls), reps=measure_reps,
+            campaign=spec.name)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Measured cross-check (Pallas interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def measure_vls(vls: Sequence[int], cap: int = 2) -> tuple[int, ...]:
+    """Shortlist of vector VLs worth timing (interpret mode is slow)."""
+    vec = sorted(v for v in vls if v != SCALAR_VL)
+    if not vec:
+        return ()
+    picks = {vec[0], vec[-1]}
+    return tuple(sorted(picks))[:cap]
+
+
+def measure_interpret(
+    kernels: Sequence[str] = KERNELS,
+    vls: Sequence[int] = (64, 256),
+    reps: int = 1,
+    campaign: str = "",
+) -> list[dict]:
+    """Time the real Pallas kernels (interpret mode, small fixed problems).
+
+    Wall time under the interpreter is NOT a hardware performance statement;
+    these records exist so every campaign carries a measured counterpart to
+    its modeled cycles in the same schema, and the ratio between them can be
+    tracked across PRs.  jax imports are deferred so the analytic path stays
+    importable without an accelerator stack.
+    """
+    import jax
+    import numpy as rnp
+
+    from repro.graphs import gen as G
+    from repro.kernels import ops
+    from repro.sparse import formats as F
+
+    def wall_us(fn) -> float:
+        jax.block_until_ready(fn())     # warm/compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    n = 512
+    csr = F.random_csr(n, n, 8.0, seed=0)
+    x = rnp.random.default_rng(0).standard_normal(n)
+    sig = rnp.random.default_rng(1).standard_normal((4, n))
+    graph = G.random_graph(n_nodes=n, avg_degree=8, seed=2)
+
+    runners: dict[str, Callable[[int], Callable]] = {
+        # format conversion binds at closure creation (default arg), so the
+        # timed call pays only the kernel — not host-side packing
+        "spmv": lambda vl: (lambda ell=F.csr_to_ellpack(csr, c=vl):
+                            ops.spmv(ell, x, vl=vl)),
+        "fft": lambda vl: (lambda: ops.fft(sig)),
+        "bfs": lambda vl: (lambda: ops.bfs(graph, 0, vl=vl)),
+        "pagerank": lambda vl: (lambda: ops.pagerank(graph, iters=3, vl=vl)),
+    }
+    records = []
+    for kernel in kernels:
+        if kernel not in runners:
+            continue
+        for vl in vls:
+            records.append({
+                "campaign": campaign,
+                "machine": "pallas-interpret",
+                "kernel": kernel,
+                "vl": int(vl),
+                "extra_latency": 0,
+                "bw_limit": BW_UNLIMITED,
+                "us_per_call": round(wall_us(runners[kernel](int(vl))), 1),
+                "problem": f"n={n}",
+                "source": "measured-interpret",
+            })
+    return records
+
+
+def crosscheck_measured(result: CampaignResult) -> list[dict]:
+    """Join modeled cycles with measured timings per (kernel, vl).
+
+    Emits one row per measured record that has a modeled counterpart in the
+    cube (machine 0, +0-latency / first-bandwidth corner), carrying both
+    numbers and their ratio so drift between model and kernels is a diffable
+    artifact rather than a judgment call.
+    """
+    s = result.spec
+    rows = []
+    for rec in result.measured:
+        if rec.get("source") != "measured-interpret":
+            continue
+        k, vl = rec["kernel"], rec["vl"]
+        if k not in s.kernels or vl not in s.vls:
+            continue
+        ki, vi = s.kernels.index(k), s.vls.index(vl)
+        modeled = float(result.cycles[0, ki, vi, 0, 0])
+        measured = float(rec["us_per_call"])
+        rows.append({
+            "kernel": k,
+            "vl": vl,
+            # keeps rows apart when several benchmarks share (kernel, vl),
+            # e.g. the skewed ELLPACK-vs-SELL spmv variants
+            "problem": rec.get("problem", ""),
+            "modeled_cycles": modeled,
+            "measured_us": measured,
+            "cycles_per_us": modeled / measured if measured else float("inf"),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Named machines for cross-machine campaigns
+# ---------------------------------------------------------------------------
+
+
+def ddr_like_machine(**kw) -> MachineParams:
+    """The paper's FPGA-SDV memory system: DDR latency/bandwidth class."""
+    kw.setdefault("name", "ddr-like")
+    return MachineParams(**kw)
+
+
+def hbm_like_machine(**kw) -> MachineParams:
+    """Same core, HBM-class memory: ~4x the round-trip, 4x the bandwidth and
+    a deeper outstanding-request pool — the machine the paper argues long
+    vectors are really for."""
+    defaults = dict(
+        name="hbm-like",
+        base_mem_latency=200,
+        peak_bw_bytes_per_cycle=256.0,
+        bw_limit_bytes_per_cycle=256.0,
+        vector_mlp=12,
+        mshr=288,
+    )
+    defaults.update(kw)
+    return MachineParams(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], CampaignSpec]] = {}
+
+
+def register_campaign(builder: Callable[[], CampaignSpec], name: str | None = None) -> None:
+    spec_name = name if name is not None else builder().name
+    _REGISTRY[spec_name] = builder
+
+
+def campaign_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_campaign(name: str) -> CampaignSpec:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown campaign {name!r}; available: {campaign_names()}") from None
+
+
+def _paper_fig3() -> CampaignSpec:
+    return CampaignSpec(
+        name="paper-fig3",
+        description="Fig 3: execution time vs added memory latency, "
+                    "scalar + VL series, FPGA-SDV machine.",
+    )
+
+
+def _paper_fig4() -> CampaignSpec:
+    return dataclasses.replace(
+        _paper_fig3(), name="paper-fig4",
+        description="Fig 4: the fig3 cube normalized to the +0-latency run "
+                    "of each series (slowdown tables).")
+
+
+def _paper_fig5() -> CampaignSpec:
+    return CampaignSpec(
+        name="paper-fig5",
+        latencies=(0,),
+        bandwidths=tuple(PAPER_BANDWIDTHS),   # ints kept as-is: they are the
+                                              # table keys of the fig5 series
+        description="Fig 5: execution time vs Bandwidth Limiter setting, "
+                    "scalar + VL series, FPGA-SDV machine.",
+    )
+
+
+def _machine_compare() -> CampaignSpec:
+    from repro.core.sdv import tpu_v5e_machine
+
+    return CampaignSpec(
+        name="machine-compare",
+        vls=(SCALAR_VL, 64, 256),
+        latencies=(0, 128, 512),
+        bandwidths=(BW_UNLIMITED,),
+        machines=(ddr_like_machine(), hbm_like_machine(), tpu_v5e_machine()),
+        description="Cross-machine run (Lee et al. style): DDR-like vs "
+                    "HBM-like vs TPU-v5e constants over the same kernel grid.",
+    )
+
+
+for _builder in (_paper_fig3, _paper_fig4, _paper_fig5, _machine_compare):
+    register_campaign(_builder)
+
+
+# ---------------------------------------------------------------------------
+# Persistence: the schema-versioned BENCH_sweeps.json store
+# ---------------------------------------------------------------------------
+
+
+class SweepStore:
+    """Schema-versioned persistence for campaign results.
+
+    Document layout (``schema_version`` gates every reader)::
+
+        {"schema_version": 1,
+         "campaigns": {name: {"spec": {...}, "cycles": [...], "measured": [...]}}}
+
+    ``cycles`` round-trips through JSON exactly (repr-based float encoding),
+    so a reloaded cube compares ``==`` to the one that was stored.
+    """
+
+    def __init__(self, path: str = "BENCH_sweeps.json"):
+        self.path = path
+        self._campaigns: dict[str, CampaignResult] = {}
+        if os.path.exists(path):
+            self._load()
+
+    def _load(self) -> None:
+        with open(self.path) as f:
+            doc = json.load(f)
+        version = doc.get("schema_version")
+        if version != SCHEMA_VERSION:
+            # The store is a regenerable artifact: an incompatible document
+            # must not wedge the writer that would replace it.  Start fresh
+            # (the stale file is only overwritten on the next save()).
+            warnings.warn(
+                f"{self.path}: schema_version {version!r} != supported "
+                f"{SCHEMA_VERSION}; ignoring the stale store (it will be "
+                f"replaced on the next save)",
+                RuntimeWarning, stacklevel=3)
+            self._campaigns = {}
+            return
+        self._campaigns = {
+            name: CampaignResult.from_json(entry)
+            for name, entry in doc.get("campaigns", {}).items()
+        }
+
+    def names(self) -> list[str]:
+        return sorted(self._campaigns)
+
+    def put(self, result: CampaignResult) -> None:
+        self._campaigns[result.spec.name] = result
+
+    def get(self, name: str) -> CampaignResult:
+        try:
+            return self._campaigns[name]
+        except KeyError:
+            raise KeyError(
+                f"campaign {name!r} not in store {self.path}; "
+                f"have {self.names()}") from None
+
+    def save(self) -> str:
+        doc = {
+            "schema_version": SCHEMA_VERSION,
+            "campaigns": {n: r.to_json() for n, r in sorted(self._campaigns.items())},
+        }
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+        return self.path

@@ -31,6 +31,8 @@ import dataclasses
 import math
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.vconfig import VectorConfig
 
 # ---------------------------------------------------------------------------
@@ -213,6 +215,31 @@ class Trace:
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class PhaseCoeffs:
+    """Knob-independent terms of one phase on one machine.
+
+    Everything here depends only on the trace and the machine's *static*
+    parameters (cache sizes, line size, MLP, ports); the two SDV knobs —
+    added latency and the bandwidth limit — enter later, either as scalars
+    in :meth:`SDVMachine.run` or as whole array axes in
+    :func:`evaluate_cube`.  Keeping the split exact is what lets the
+    vectorized cube agree with the per-point model bit-for-bit.
+    """
+
+    n_iters: float
+    missing: float           # DRAM transactions / iteration
+    dram_bytes: float        # DRAM bytes / iteration
+    l2_cycles: float         # l2_bytes / l2 bandwidth (fixed-path transfer)
+    issue: float             # gather/scatter address-generation cycles
+    dep_hit_lat: float       # serialized hit latency (scalar dependent loads)
+    hit_extra: float         # vector-path cache-pipeline drain (0 if no hits)
+    compute: float           # VALU occupancy + scalar overhead / iteration
+    outstanding: float       # Little's-law concurrency cap
+    l2_bytes: float
+    mem_instructions: float
+
+
 @dataclasses.dataclass
 class PhaseResult:
     name: str
@@ -285,7 +312,8 @@ class SDVMachine:
     # tolerance mechanism.  The iteration time is the max of the bandwidth
     # term, the latency term and the compute term (decoupled overlap); an
     # in-order scalar core instead serializes compute + transfer + latency.
-    def _run_phase(self, phase: Phase, vcfg: VectorConfig, mlp: float) -> PhaseResult:
+    def phase_coeffs(self, phase: Phase, vcfg: VectorConfig, mlp: float) -> PhaseCoeffs:
+        """Fold one phase into its knob-independent :class:`PhaseCoeffs`."""
         p = self.params
         dram_bytes = 0.0
         l2_bytes = 0.0
@@ -316,39 +344,56 @@ class SDVMachine:
             l2_bytes += count * op.bytes_moved() * (1.0 - miss)
             n_instr += count
             trans_total += count * trans
-        transfer = dram_bytes / p.eff_bw + l2_bytes / p.l2_bw_bytes_per_cycle + issue
         valu_elems = phase.valu_elems if phase.valu_elems is not None else vcfg.vl
         compute = (
             phase.valu_ops * max(1.0, math.ceil(valu_elems / p.lanes))
             + phase.scalar_cycles
         )
+        trans_per_instr = trans_total / max(n_instr, 1.0)
+        outstanding = max(1.0, min(mlp * trans_per_instr, float(p.mshr)))
+        return PhaseCoeffs(
+            n_iters=phase.n_iters,
+            missing=missing,
+            dram_bytes=dram_bytes,
+            l2_cycles=l2_bytes / p.l2_bw_bytes_per_cycle,
+            issue=issue,
+            dep_hit_lat=dep_hit_lat,
+            hit_extra=hit_drain if hitting > 0 else 0.0,
+            compute=compute,
+            outstanding=outstanding,
+            l2_bytes=l2_bytes,
+            mem_instructions=n_instr,
+        )
+
+    def _run_phase(self, phase: Phase, vcfg: VectorConfig, mlp: float) -> PhaseResult:
+        p = self.params
+        c = self.phase_coeffs(phase, vcfg, mlp)
+        transfer = c.dram_bytes / p.eff_bw + c.l2_cycles + c.issue
         if vcfg.is_scalar:
             # In-order: every miss and every dependent hit is exposed.  The
             # line transfer of a blocking miss happens *within* the exposed
             # round-trip, so bandwidth only binds when a line takes longer to
             # stream than the round-trip itself: max(), not sum -- this is
             # why a scalar core cannot exploit more than 1-2 B/cycle (Fig 5).
-            latency_time = missing * p.mem_latency + dep_hit_lat
-            cycles_per_iter = compute + max(transfer, latency_time)
+            latency_time = c.missing * p.mem_latency + c.dep_hit_lat
+            cycles_per_iter = c.compute + max(transfer, latency_time)
             exposure = latency_time
         else:
-            trans_per_instr = trans_total / max(n_instr, 1.0)
-            outstanding = max(1.0, min(mlp * trans_per_instr, float(p.mshr)))
-            latency_time = missing * p.mem_latency / outstanding
-            if hitting > 0:  # cache pipeline drain for the hit path
-                latency_time += hit_drain
-            cycles_per_iter = max(transfer, latency_time, compute)
+            # cache-pipeline drain (hit_extra) rides on top of the
+            # Little's-law exposed-miss term
+            latency_time = c.missing * p.mem_latency / c.outstanding + c.hit_extra
+            cycles_per_iter = max(transfer, latency_time, c.compute)
             exposure = latency_time
-        total = phase.n_iters * cycles_per_iter + p.mem_latency  # pipeline drain
+        total = c.n_iters * cycles_per_iter + p.mem_latency  # pipeline drain
         return PhaseResult(
             name=phase.name,
             cycles=total,
-            transfer_cycles=phase.n_iters * transfer,
-            compute_cycles=phase.n_iters * compute,
-            exposure_cycles=phase.n_iters * exposure,
-            dram_bytes=phase.n_iters * dram_bytes,
-            l2_bytes=phase.n_iters * l2_bytes,
-            mem_instructions=phase.n_iters * n_instr,
+            transfer_cycles=c.n_iters * transfer,
+            compute_cycles=c.n_iters * c.compute,
+            exposure_cycles=c.n_iters * exposure,
+            dram_bytes=c.n_iters * c.dram_bytes,
+            l2_bytes=c.n_iters * c.l2_bytes,
+            mem_instructions=c.n_iters * c.mem_instructions,
         )
 
     def run(self, trace: Trace) -> RunResult:
@@ -360,6 +405,84 @@ class SDVMachine:
             cycles=sum(p.cycles for p in phases),
             phases=phases,
         )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized cube evaluation — the whole knob grid in one broadcast
+# ---------------------------------------------------------------------------
+
+
+def evaluate_cube(
+    traces: Sequence[Trace],
+    machine: MachineParams,
+    extra_latencies: Sequence[int],
+    bw_limits: Sequence[float],
+) -> np.ndarray:
+    """Cycles for every (trace, extra_latency, bw_limit) point at once.
+
+    Replaces the per-point ``SDVMachine(machine.with_latency(l)
+    .with_bandwidth(b)).run(trace)`` triple loop with a single numpy
+    broadcast: the knob-independent :class:`PhaseCoeffs` of each trace are
+    stacked into ``(trace, phase)`` arrays and the two knobs become trailing
+    axes, so an arbitrarily large campaign grid costs one array expression
+    instead of thousands of Python-level model runs.
+
+    The arithmetic mirrors :meth:`SDVMachine._run_phase` operation for
+    operation (same order, same float64 terms), so each cube cell equals the
+    per-point result *exactly* — tests assert ``==``, not ``approx``.
+
+    Returns an array of shape ``(len(traces), len(extra_latencies),
+    len(bw_limits))``.
+    """
+    if not traces:
+        return np.zeros((0, len(extra_latencies), len(bw_limits)))
+    p = machine
+    model = SDVMachine(p)
+    n_t = len(traces)
+    n_p = max(len(t.phases) for t in traces)
+
+    (n_iters, missing, dram_bytes, l2_cycles, issue, dep_hit_lat, hit_extra,
+     compute) = (np.zeros((n_t, n_p)) for _ in range(8))
+    outstanding = np.ones((n_t, n_p))  # pad-safe divisor
+    valid = np.zeros((n_t, n_p), dtype=bool)
+    is_scalar = np.zeros(n_t, dtype=bool)
+    for i, trace in enumerate(traces):
+        is_scalar[i] = trace.vcfg.is_scalar
+        mlp = float(p.scalar_mlp if trace.vcfg.is_scalar else p.vector_mlp)
+        for j, phase in enumerate(trace.phases):
+            c = model.phase_coeffs(phase, trace.vcfg, mlp)
+            n_iters[i, j] = c.n_iters
+            missing[i, j] = c.missing
+            dram_bytes[i, j] = c.dram_bytes
+            l2_cycles[i, j] = c.l2_cycles
+            issue[i, j] = c.issue
+            dep_hit_lat[i, j] = c.dep_hit_lat
+            hit_extra[i, j] = c.hit_extra
+            compute[i, j] = c.compute
+            outstanding[i, j] = c.outstanding
+            valid[i, j] = True
+
+    # knob axes: (trace, phase, latency, bandwidth)
+    lat = np.asarray(extra_latencies, dtype=np.float64).reshape(1, -1, 1)
+    bw = np.asarray(bw_limits, dtype=np.float64).reshape(1, 1, -1)
+    mem_latency = float(p.base_mem_latency) + lat
+    eff_bw = np.minimum(float(p.peak_bw_bytes_per_cycle), bw)
+
+    scal = is_scalar[:, None, None]
+    cycles = np.zeros((n_t, len(extra_latencies), len(bw_limits)))
+    for j in range(n_p):
+        col = (slice(None), j, None, None)    # (T,) phase column -> (T, 1, 1)
+        transfer = dram_bytes[col] / eff_bw + l2_cycles[col] + issue[col]
+        lt_scalar = missing[col] * mem_latency + dep_hit_lat[col]
+        per_scalar = compute[col] + np.maximum(transfer, lt_scalar)
+        lt_vector = missing[col] * mem_latency / outstanding[col] + hit_extra[col]
+        per_vector = np.maximum(np.maximum(transfer, lt_vector), compute[col])
+        per_iter = np.where(scal, per_scalar, per_vector)
+        total = n_iters[col] * per_iter + mem_latency
+        # accumulate sequentially so the phase sum matches the per-point
+        # Python ``sum`` bit-for-bit (padded phases contribute exact zeros)
+        cycles += np.where(valid[col], total, 0.0)
+    return cycles
 
 
 # ---------------------------------------------------------------------------

@@ -8,23 +8,28 @@ VL in {8..256}:
 * :func:`bandwidth_sweep` -> Fig 5 (times normalized to the 1 B/cycle run)
 
 and machine-checkable validators for the paper's two claims.
+
+Since the campaign refactor this module is a thin compatibility wrapper: the
+actual evaluation is one vectorized cube per call
+(:mod:`repro.core.campaign` / :func:`repro.core.sdv.evaluate_cube`), and the
+dict-of-dicts :class:`SweepResult` layout these helpers return is just a view
+of that cube.  New code should run named campaigns and persist them through
+:class:`repro.core.campaign.SweepStore` instead.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Mapping, Sequence
 
 from repro.core import sdv
-from repro.core.sdv import MachineParams, SDVMachine
-from repro.core.traffic import TRACE_BUILDERS
-from repro.core.vconfig import PAPER_VLS, SCALAR_VL, VectorConfig
+from repro.core.sdv import MachineParams
+from repro.core.vconfig import PAPER_VLS, SCALAR_VL, series_label
 
 SERIES = (SCALAR_VL,) + PAPER_VLS     # scalar (blue) + red gradient
 KERNELS = ("spmv", "bfs", "pagerank", "fft")
 
-
-def _series_label(vl: int) -> str:
-    return "scalar" if vl == SCALAR_VL else f"vl{vl}"
+_series_label = series_label          # backwards-compatible alias
 
 
 @dataclasses.dataclass
@@ -36,10 +41,25 @@ class SweepResult:
 
     def normalized(self, anchor: int) -> dict[str, dict[int, dict[int, float]]]:
         out: dict[str, dict[int, dict[int, float]]] = {}
+        warned = False
         for kernel, per_vl in self.data.items():
             out[kernel] = {}
             for vl, curve in per_vl.items():
-                base = curve[anchor]
+                if anchor in curve:
+                    base = curve[anchor]
+                else:
+                    # Custom knob grids may not contain the canonical anchor
+                    # (e.g. a latency grid without +0): fall back to the
+                    # smallest knob value so normalization stays well-defined.
+                    fallback = min(curve)
+                    if not warned:
+                        warnings.warn(
+                            f"normalization anchor {anchor!r} missing from the "
+                            f"{self.knob} grid; anchoring at the minimum knob "
+                            f"value {fallback!r} instead",
+                            RuntimeWarning, stacklevel=2)
+                        warned = True
+                    base = curve[fallback]
                 out[kernel][vl] = {k: v / base for k, v in curve.items()}
         return out
 
@@ -48,7 +68,18 @@ class SweepResult:
         for kernel, per_vl in self.data.items():
             for vl, curve in per_vl.items():
                 for knob_value, cycles in sorted(curve.items()):
-                    yield kernel, _series_label(vl), knob_value, cycles
+                    yield kernel, series_label(vl), knob_value, cycles
+
+
+def sweep_result_from_campaign(result, knob: str | None = None,
+                               machine: int = 0) -> SweepResult:
+    """View a :class:`repro.core.campaign.CampaignResult` as a SweepResult.
+
+    ``knob`` is inferred from whichever knob axis is non-singleton when not
+    given (a 1x1 cube defaults to the latency knob)."""
+    if knob is None:
+        knob = "bw_limit" if len(result.spec.bandwidths) > 1 else "extra_latency"
+    return SweepResult(knob, result.curves(knob=knob, machine=machine))
 
 
 def latency_sweep(
@@ -57,18 +88,18 @@ def latency_sweep(
     vls: Sequence[int] = SERIES,
     latencies: Sequence[int] = sdv.PAPER_LATENCIES,
 ) -> SweepResult:
+    from repro.core.campaign import CampaignSpec, run_campaign
+
     machine = machine or MachineParams()
-    data: dict[str, dict[int, dict[int, float]]] = {}
-    for kernel in kernels:
-        build = TRACE_BUILDERS[kernel]
-        data[kernel] = {}
-        for vl in vls:
-            trace = build(VectorConfig(vl=vl))
-            data[kernel][vl] = {
-                lat: SDVMachine(machine.with_latency(lat)).run(trace).cycles
-                for lat in latencies
-            }
-    return SweepResult("extra_latency", data)
+    spec = CampaignSpec(
+        name="adhoc-latency",
+        kernels=tuple(kernels),
+        vls=tuple(vls),
+        latencies=tuple(latencies),
+        bandwidths=(machine.bw_limit_bytes_per_cycle,),
+        machines=(machine,),
+    )
+    return sweep_result_from_campaign(run_campaign(spec), knob="extra_latency")
 
 
 def bandwidth_sweep(
@@ -77,18 +108,18 @@ def bandwidth_sweep(
     vls: Sequence[int] = SERIES,
     bandwidths: Sequence[int] = sdv.PAPER_BANDWIDTHS,
 ) -> SweepResult:
+    from repro.core.campaign import CampaignSpec, run_campaign
+
     machine = machine or MachineParams()
-    data: dict[str, dict[int, dict[int, float]]] = {}
-    for kernel in kernels:
-        build = TRACE_BUILDERS[kernel]
-        data[kernel] = {}
-        for vl in vls:
-            trace = build(VectorConfig(vl=vl))
-            data[kernel][vl] = {
-                bw: SDVMachine(machine.with_bandwidth(bw)).run(trace).cycles
-                for bw in bandwidths
-            }
-    return SweepResult("bw_limit", data)
+    spec = CampaignSpec(
+        name="adhoc-bandwidth",
+        kernels=tuple(kernels),
+        vls=tuple(vls),
+        latencies=(machine.extra_latency,),
+        bandwidths=tuple(bandwidths),
+        machines=(machine,),
+    )
+    return sweep_result_from_campaign(run_campaign(spec), knob="bw_limit")
 
 
 def slowdown_tables(latency_result: SweepResult) -> dict[str, dict[int, dict[int, float]]]:

@@ -314,3 +314,14 @@ TRACE_BUILDERS = {
     "pagerank": lambda vcfg: pagerank_trace(PAPER_PROBLEMS["pagerank"], vcfg),
     "fft": lambda vcfg: fft_trace(PAPER_PROBLEMS["fft"], vcfg),
 }
+
+
+def build_trace_grid(kernels, vls) -> list[Trace]:
+    """Traces for every (kernel, vl) pair, in ``kernel``-major order — the
+    flattened leading axis consumed by :func:`repro.core.sdv.evaluate_cube`
+    and reshaped back by the campaign runner."""
+    return [
+        TRACE_BUILDERS[kernel](VectorConfig(vl=vl))
+        for kernel in kernels
+        for vl in vls
+    ]

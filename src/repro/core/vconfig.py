@@ -19,6 +19,12 @@ PAPER_VLS: tuple[int, ...] = (8, 16, 32, 64, 128, 256)
 SCALAR_VL = 1
 
 
+def series_label(vl: int) -> str:
+    """Display label of a sweep series ('scalar' or 'vlN'), shared by the
+    figure tables, the campaign records and the CSV emitters."""
+    return "scalar" if vl == SCALAR_VL else f"vl{vl}"
+
+
 @dataclasses.dataclass(frozen=True)
 class VectorConfig:
     """Software-visible vector configuration (the paper's VL CSR).

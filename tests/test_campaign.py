@@ -1,0 +1,304 @@
+"""Tests of the sweep-campaign engine (repro.core.campaign).
+
+The load-bearing guarantee: the vectorized cube evaluation equals the legacy
+per-point ``SDVMachine`` loop *exactly* — ``==`` on float64, not approx — for
+all four kernels over the full paper VL/latency/bandwidth grid.  Plus the
+schema-versioned BENCH_sweeps.json round-trip, the claim gates consumed by
+CI, and the ``SweepResult.normalized`` anchor-fallback fix.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import sweep, traffic
+from repro.core.campaign import (
+    BW_UNLIMITED,
+    SCHEMA_VERSION,
+    CampaignResult,
+    CampaignSpec,
+    SweepStore,
+    campaign_names,
+    crosscheck_measured,
+    get_campaign,
+    hbm_like_machine,
+    resolve_bandwidth,
+    run_campaign,
+)
+from repro.core.sdv import (
+    PAPER_BANDWIDTHS,
+    PAPER_LATENCIES,
+    MachineParams,
+    SDVMachine,
+    evaluate_cube,
+    tpu_v5e_machine,
+)
+from repro.core.sweep import sweep_result_from_campaign
+from repro.core.vconfig import PAPER_VLS, SCALAR_VL, VectorConfig
+
+FULL_SERIES = (SCALAR_VL,) + PAPER_VLS
+
+
+@pytest.fixture(scope="module")
+def fig3():
+    return run_campaign("paper-fig3")
+
+
+@pytest.fixture(scope="module")
+def fig5():
+    return run_campaign("paper-fig5")
+
+
+# ---------------------------------------------------------------------------
+# Vectorized cube == legacy per-point loop, exactly
+# ---------------------------------------------------------------------------
+
+
+def test_cube_matches_legacy_latency_loop_exactly(fig3):
+    """Full paper grid, all four kernels: the fig3 cube must equal the
+    per-point SDVMachine loop bit-for-bit."""
+    machine = MachineParams()
+    s = fig3.spec
+    assert s.kernels == ("spmv", "bfs", "pagerank", "fft")
+    assert s.vls == FULL_SERIES and s.latencies == PAPER_LATENCIES
+    for ki, kernel in enumerate(s.kernels):
+        build = traffic.TRACE_BUILDERS[kernel]
+        for vi, vl in enumerate(s.vls):
+            trace = build(VectorConfig(vl=vl))
+            for li, lat in enumerate(s.latencies):
+                legacy = SDVMachine(machine.with_latency(lat)).run(trace).cycles
+                assert fig3.cycles[0, ki, vi, li, 0] == legacy, (kernel, vl, lat)
+
+
+def test_cube_matches_legacy_bandwidth_loop_exactly(fig5):
+    machine = MachineParams()
+    s = fig5.spec
+    assert s.bandwidths == PAPER_BANDWIDTHS
+    for ki, kernel in enumerate(s.kernels):
+        build = traffic.TRACE_BUILDERS[kernel]
+        for vi, vl in enumerate(s.vls):
+            trace = build(VectorConfig(vl=vl))
+            for bi, bw in enumerate(s.bandwidths):
+                legacy = SDVMachine(machine.with_bandwidth(bw)).run(trace).cycles
+                assert fig5.cycles[0, ki, vi, 0, bi] == legacy, (kernel, vl, bw)
+
+
+def test_cube_matches_legacy_on_other_machines():
+    """The exactness contract is not special to the default machine."""
+    lats, bws = (0, 64, 700), (4.0, 200.0)
+    for machine in (hbm_like_machine(), tpu_v5e_machine()):
+        traces = traffic.build_trace_grid(("spmv", "fft"), (SCALAR_VL, 128))
+        cube = evaluate_cube(traces, machine, lats, bws)
+        for i, trace in enumerate(traces):
+            for li, lat in enumerate(lats):
+                for bi, bw in enumerate(bws):
+                    legacy = SDVMachine(
+                        machine.with_latency(lat).with_bandwidth(bw)).run(trace).cycles
+                    assert cube[i, li, bi] == legacy
+
+
+def test_sweep_wrappers_are_campaign_views(fig3, fig5):
+    """latency_sweep/bandwidth_sweep now delegate to the campaign engine and
+    must reproduce the stored cube values exactly."""
+    lat = sweep.latency_sweep()
+    for ki, kernel in enumerate(fig3.spec.kernels):
+        for vi, vl in enumerate(fig3.spec.vls):
+            for li, knob in enumerate(fig3.spec.latencies):
+                assert lat.data[kernel][vl][knob] == fig3.cycles[0, ki, vi, li, 0]
+    bw = sweep.bandwidth_sweep()
+    for ki, kernel in enumerate(fig5.spec.kernels):
+        for vi, vl in enumerate(fig5.spec.vls):
+            for bi, knob in enumerate(fig5.spec.bandwidths):
+                assert bw.data[kernel][vl][knob] == fig5.cycles[0, ki, vi, 0, bi]
+
+
+# ---------------------------------------------------------------------------
+# Claim gates from campaign cubes (what CI's paper-claims job runs)
+# ---------------------------------------------------------------------------
+
+
+def test_paper_claims_hold_on_campaign_cubes(fig3, fig5):
+    tables = sweep.slowdown_tables(sweep_result_from_campaign(fig3))
+    assert sweep.check_latency_claim(tables) == []
+    assert sweep.check_bandwidth_claim(sweep_result_from_campaign(fig5)) == []
+
+
+# ---------------------------------------------------------------------------
+# Store round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_exact(tmp_path, fig3):
+    path = str(tmp_path / "BENCH_sweeps.json")
+    store = SweepStore(path)
+    store.put(fig3)
+    store.put(run_campaign("machine-compare"))
+    store.save()
+
+    reloaded = SweepStore(path)
+    assert reloaded.names() == ["machine-compare", "paper-fig3"]
+    got = reloaded.get("paper-fig3")
+    assert got.spec == fig3.spec
+    assert got.cycles.shape == fig3.cycles.shape
+    assert np.array_equal(got.cycles, fig3.cycles)   # exact, not approx
+
+    doc = json.loads(open(path).read())
+    assert doc["schema_version"] == SCHEMA_VERSION
+
+
+def test_store_measured_records_roundtrip(tmp_path):
+    spec = CampaignSpec(name="tiny", kernels=("spmv",), vls=(64,),
+                        latencies=(0,), bandwidths=(BW_UNLIMITED,))
+    result = run_campaign(spec)
+    result.measured = [{
+        "campaign": "tiny", "machine": "pallas-interpret", "kernel": "spmv",
+        "vl": 64, "extra_latency": 0, "bw_limit": BW_UNLIMITED,
+        "us_per_call": 123.4, "source": "measured-interpret",
+    }]
+    path = str(tmp_path / "s.json")
+    store = SweepStore(path)
+    store.put(result)
+    store.save()
+    got = SweepStore(path).get("tiny")
+    assert got.measured == result.measured
+    xc = crosscheck_measured(got)
+    assert len(xc) == 1 and xc[0]["kernel"] == "spmv"
+    assert xc[0]["modeled_cycles"] == result.cycles[0, 0, 0, 0, 0]
+    assert xc[0]["measured_us"] == 123.4
+
+
+def test_store_discards_unknown_schema_version(tmp_path):
+    """A writer must never be wedged by an incompatible store it is about to
+    replace: the stale document is warned about and ignored."""
+    path = tmp_path / "s.json"
+    path.write_text(json.dumps(
+        {"schema_version": 999, "campaigns": {"ghost": {}}}))
+    with pytest.warns(RuntimeWarning, match="schema_version 999"):
+        store = SweepStore(str(path))
+    assert store.names() == []
+    store.put(run_campaign(CampaignSpec(
+        name="fresh", kernels=("spmv",), vls=(64,), latencies=(0,))))
+    store.save()
+    assert SweepStore(str(path)).names() == ["fresh"]   # replaced cleanly
+
+
+# ---------------------------------------------------------------------------
+# Spec / registry / records
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_the_paper_campaigns():
+    names = campaign_names()
+    for expected in ("paper-fig3", "paper-fig4", "paper-fig5", "machine-compare"):
+        assert expected in names
+    with pytest.raises(KeyError, match="unknown campaign"):
+        get_campaign("paper-fig99")
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown kernels"):
+        CampaignSpec(name="bad", kernels=("nope",))
+    with pytest.raises(ValueError, match="empty"):
+        CampaignSpec(name="bad", vls=())
+
+
+def test_bw_sentinel_resolves_per_machine():
+    assert resolve_bandwidth(MachineParams(), BW_UNLIMITED) == 64.0
+    assert resolve_bandwidth(hbm_like_machine(), BW_UNLIMITED) == 256.0
+    assert resolve_bandwidth(MachineParams(), 8) == 8.0
+
+
+def test_machine_compare_cube_and_records():
+    res = run_campaign("machine-compare")
+    assert res.cycles.shape == res.spec.shape
+    assert res.cycles.shape[0] == 3                 # three machines
+    recs = list(res.records())
+    assert len(recs) == res.spec.n_points
+    sample = recs[0]
+    for key in ("campaign", "machine", "kernel", "vl", "extra_latency",
+                "bw_limit", "cycles", "source"):
+        assert key in sample
+    assert sample["source"] == "modeled"
+    # HBM machine must beat the DDR machine at high added latency, long VL
+    s = res.spec
+    ki, vi, li = s.kernels.index("spmv"), s.vls.index(256), s.latencies.index(512)
+    assert res.cycles[1, ki, vi, li, 0] < res.cycles[0, ki, vi, li, 0]
+
+
+def test_user_defined_cube():
+    spec = CampaignSpec(
+        name="custom", kernels=("bfs", "fft"), vls=(16, 256),
+        latencies=(0, 100, 200), bandwidths=(2, 32),
+        machines=(MachineParams(), hbm_like_machine()),
+    )
+    res = run_campaign(spec)
+    assert res.cycles.shape == (2, 2, 2, 3, 2)
+    assert np.all(res.cycles > 0) and np.all(np.isfinite(res.cycles))
+    # latency monotonicity survives the vectorized path
+    assert np.all(np.diff(res.cycles, axis=3) >= -1e-9)
+
+
+def test_curves_requires_singleton_other_axis():
+    res = run_campaign(CampaignSpec(
+        name="both-knobs", kernels=("spmv",), vls=(64,),
+        latencies=(0, 64), bandwidths=(8, 64)))
+    with pytest.raises(ValueError, match="singleton"):
+        res.curves(knob="extra_latency")
+    with pytest.raises(ValueError, match="singleton"):
+        res.curves(knob="bw_limit")
+
+
+def test_fig4_is_fig3_cube():
+    f3, f4 = get_campaign("paper-fig3"), get_campaign("paper-fig4")
+    assert dataclasses.replace(f4, name=f3.name, description=f3.description) == f3
+
+
+def test_bench_kernels_records_join_campaign_cubes():
+    """benchmarks.bench_kernels.campaign_records emits the store's measured
+    record schema, so microbench wall times cross-check against any campaign
+    cube via crosscheck_measured (what the default benchmarks.run does)."""
+    bench_kernels = pytest.importorskip(
+        "benchmarks.bench_kernels",
+        reason="benchmarks namespace package needs the repo root on sys.path")
+    table = {
+        "spmv_vl128_interpret": {"us_per_call": 10.0, "pad_factor": 1.5},
+        "fft2048_b8_interpret": {"us_per_call": 5.0},
+    }
+    recs = bench_kernels.campaign_records(table)
+    assert {r["kernel"]: r["vl"] for r in recs} == {"spmv": 128, "fft": 256}
+    for rec in recs:
+        for key in ("campaign", "machine", "kernel", "vl", "extra_latency",
+                    "bw_limit", "us_per_call", "source"):
+            assert key in rec
+        assert rec["source"] == "measured-interpret"
+    res = run_campaign(CampaignSpec(
+        name="join", kernels=("spmv",), vls=(128,), latencies=(0,)))
+    res.measured = recs
+    rows = crosscheck_measured(res)
+    assert len(rows) == 1
+    assert rows[0]["vl"] == 128 and rows[0]["measured_us"] == 10.0
+    assert rows[0]["modeled_cycles"] == res.cycles[0, 0, 0, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix: SweepResult.normalized anchor fallback
+# ---------------------------------------------------------------------------
+
+
+def test_normalized_missing_anchor_falls_back_to_min_knob():
+    """A custom latency grid without +0 used to KeyError; it must anchor at
+    the minimum knob value and warn instead."""
+    res = sweep.latency_sweep(kernels=("spmv",), vls=(64,), latencies=(16, 64, 256))
+    with pytest.warns(RuntimeWarning, match="anchor 0 .*minimum knob value 16"):
+        norm = res.normalized(anchor=0)
+    curve = norm["spmv"][64]
+    assert curve[16] == pytest.approx(1.0)
+    assert curve[64] >= 1.0 and curve[256] >= curve[64]
+
+
+def test_normalized_present_anchor_does_not_warn(recwarn):
+    res = sweep.latency_sweep(kernels=("spmv",), vls=(64,), latencies=(0, 64))
+    norm = res.normalized(anchor=0)
+    assert norm["spmv"][64][0] == pytest.approx(1.0)
+    assert not [w for w in recwarn.list if issubclass(w.category, RuntimeWarning)]
