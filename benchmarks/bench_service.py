@@ -1,0 +1,213 @@
+"""Serving-subsystem benchmark: tune-cache latency + throughput vs load.
+
+``PYTHONPATH=src python -m benchmarks.bench_service`` registers a small CSR
+matrix, a cage10-like graph and an FFT plan in a :class:`KernelRegistry`,
+then
+
+* times registration against a **cold** TuneCache (full (C, sigma) sweep,
+  dozens of measured pad factors) vs a **warm** one reloaded from disk
+  (zero measurements) — the pay-once contract of the serving subsystem as a
+  number;
+* drives the :class:`KernelService` at several offered-load levels (mixed
+  SpMV / FFT / PageRank / BFS request batches) and reports throughput and
+  mean per-request latency at each level.
+
+Results go to ``BENCH_service.json`` (name -> metrics, ``us_per_call``
+tracked by ``scripts/bench_compare.py`` in the CI ``service-smoke`` job).
+Interpret-mode wall times are NOT a hardware performance statement — the
+table exists so the serving path provably runs end-to-end and its trends are
+diffable across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def _build_operands(small_n: int = 512):
+    """The bench/CI fixture: small skewed CSR + cage10-like graph + FFT."""
+    from repro.graphs.gen import EllpackGraph
+    from repro.sparse import formats as F
+
+    csr = F.random_csr(small_n, small_n, 8.0, seed=0, skew=1.0)
+    # cage10-like *graph*: the adjacency structure of the paper's matrix
+    # (banded, ~13 neighbors/node), trimmed to keep interpret-mode BFS
+    # tractable in CI while preserving the degree law.
+    cage = F.cage10_like(seed=0)
+    n_nodes = 2048
+    keep = cage.indptr[1:][:n_nodes] - cage.indptr[:-1][:n_nodes]
+    adj_width = int(keep.max())
+    adj = np.full((n_nodes, adj_width), -1, np.int32)
+    for v in range(n_nodes):
+        lo, hi = cage.indptr[v], cage.indptr[v + 1]
+        nbrs = cage.indices[lo:hi] % n_nodes
+        adj[v, : hi - lo] = nbrs
+    graph = EllpackGraph(adj=adj, n_nodes=n_nodes)
+    return csr, graph
+
+
+def bench_tune(cache_path: str) -> dict:
+    """Cold-vs-warm tune latency through the persistent TuneCache."""
+    import repro.core.autotune as autotune
+    import repro.kernels.ops  # noqa: F401 - warm the kernel-module import so
+    #                           cold_us times the tune, not module loading
+    from repro.service import KernelRegistry, TuneCache
+
+    csr, _ = _build_operands()
+
+    calls = [0]
+    real = autotune.measured_pad_factor
+
+    def counting(*a, **kw):
+        calls[0] += 1
+        return real(*a, **kw)
+
+    autotune.measured_pad_factor = counting
+    try:
+        if os.path.exists(cache_path):
+            os.remove(cache_path)
+        cold_cache = TuneCache(cache_path)
+        reg = KernelRegistry(cache=cold_cache)
+        t0 = time.perf_counter()
+        reg.register_matrix("mat", csr)
+        cold_us = (time.perf_counter() - t0) * 1e6
+        cold_calls, calls[0] = calls[0], 0
+        cold_cache.save()
+
+        warm_cache = TuneCache(cache_path)           # reloaded from disk
+        reg2 = KernelRegistry(cache=warm_cache)
+        t0 = time.perf_counter()
+        op = reg2.register_matrix("mat", csr)
+        warm_us = (time.perf_counter() - t0) * 1e6
+        warm_calls = calls[0]
+    finally:
+        autotune.measured_pad_factor = real
+
+    assert op.tune_was_cached and warm_calls == 0, (
+        f"warm registration must not measure (got {warm_calls} calls)")
+    return {
+        "service_tune_cold": {
+            "us_per_call": round(cold_us, 1),
+            "measured_pad_factors": cold_calls,
+        },
+        "service_tune_warm": {
+            "us_per_call": round(warm_us, 1),
+            "measured_pad_factors": warm_calls,
+            "speedup_vs_cold": round(cold_us / max(warm_us, 1e-9), 1),
+        },
+    }
+
+
+def _mixed_batch(rng, svc, csr, n_fft: int, load: int,
+                 with_bfs: bool) -> list[int]:
+    """Submit ``load`` mixed requests; returns their rids.
+
+    Mix per 8 requests: 4 SpMV, 2 FFT, 1 PageRank, 1 BFS (BFS optional —
+    interpret-mode BFS is the slow one, CI keeps a couple for coverage).
+    """
+    rids = []
+    for i in range(load):
+        kind = i % 8
+        if kind < 4:
+            rids.append(svc.submit(
+                "spmv", "mat", rng.standard_normal(csr.n_cols)))
+        elif kind < 6:
+            rids.append(svc.submit(
+                "fft", "fft", rng.standard_normal((1, n_fft))))
+        elif kind == 6:
+            rids.append(svc.submit("pagerank", "graph", iters=2))
+        elif with_bfs:
+            rids.append(svc.submit("bfs", "graph", source=int(rng.integers(0, 64))))
+        else:
+            rids.append(svc.submit(
+                "spmv", "mat", rng.standard_normal(csr.n_cols)))
+    return rids
+
+
+def bench_load(loads=(8, 32, 100), n_slots: int = 8,
+               with_bfs: bool = True) -> dict:
+    """Throughput vs offered load through one shared registry."""
+    from repro.service import KernelRegistry, KernelService, TuneCache
+
+    csr, graph = _build_operands()
+    n_fft = 1024
+    reg = KernelRegistry(cache=TuneCache())
+    reg.register_matrix("mat", csr)
+    reg.register_graph("graph", graph)
+    reg.register_fft("fft", n_fft)
+
+    rng = np.random.default_rng(0)
+    table = {}
+    # warm-up: compile every kernel shape once so load levels compare
+    # scheduling, not compilation
+    warm = KernelService(reg, n_slots=n_slots)
+    _mixed_batch(rng, warm, csr, n_fft, 8, with_bfs)
+    warm.drain()
+
+    for load in loads:
+        svc = KernelService(reg, n_slots=n_slots)
+        rng_l = np.random.default_rng(load)
+        t0 = time.perf_counter()
+        rids = _mixed_batch(rng_l, svc, csr, n_fft, load, with_bfs)
+        done = svc.drain()
+        wall = time.perf_counter() - t0
+        assert len(done) == load and all(
+            svc.poll(rid) is not None for rid in rids)
+        table[f"service_load_{load}"] = {
+            "us_per_call": round(wall / load * 1e6, 1),
+            "throughput_rps": round(load / wall, 1),
+            "offered": load,
+            "served": svc.stats["served"],
+            "steps": svc.stats["steps"],
+            "groups": svc.stats["groups"],
+            "coalesced": svc.stats["coalesced"],
+            "max_group": svc.stats["max_group"],
+        }
+    return table
+
+
+def collect(loads=(8, 32, 100), requests: int | None = None,
+            cache_path: str = "BENCH_tunecache.json") -> dict:
+    if requests:
+        loads = tuple(sorted(set(list(loads) + [requests])))
+    table = bench_tune(cache_path)
+    table.update(bench_load(loads))
+    return table
+
+
+def main(argv=None) -> None:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_service.json",
+                    help="machine-readable output path")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="additionally bench this offered-load level "
+                         "(levels already in the default ladder dedupe; "
+                         "the 100-request CI smoke level is baselined)")
+    ap.add_argument("--cache", default="BENCH_tunecache.json",
+                    help="TuneCache path used by the cold/warm comparison")
+    args = ap.parse_args(argv)
+
+    table = collect(requests=args.requests, cache_path=args.cache)
+    print("# table: serving subsystem (name,us_per_call,derived)")
+    for name, entry in table.items():
+        extras = ",".join(
+            f"{k}={v}" for k, v in entry.items() if k != "us_per_call")
+        print(f"{name},{entry['us_per_call']:.0f},{extras}")
+    with open(args.json, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

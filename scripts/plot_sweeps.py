@@ -1,0 +1,199 @@
+#!/usr/bin/env python3
+"""Render fig3/4/5-style figures from a stored BENCH_sweeps.json cube.
+
+    PYTHONPATH=src python scripts/plot_sweeps.py \
+        [--store BENCH_sweeps.json] [--out plots] [--campaign NAME ...]
+
+For each requested campaign present in the store (default: every stored
+``paper-fig*`` campaign plus ``machine-compare``):
+
+* ``paper-fig3`` — execution cycles vs added memory latency, one panel per
+  kernel, one series per VL (the scalar series dashed);
+* ``paper-fig4`` — the same cube normalized to each series' +0-latency run;
+* ``paper-fig5`` — normalized time vs Bandwidth Limiter setting;
+* anything else (``machine-compare``, user cubes) — cycles vs the
+  non-singleton knob, one figure per machine.
+
+matplotlib is an optional dependency: when it is importable each figure is
+written to ``--out`` as PNG; otherwise the same projections are printed as
+aligned text tables, so the script is useful on a bare CI box.  Everything
+is drawn from the persisted store — nothing is re-evaluated.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.campaign import CampaignResult, SweepStore       # noqa: E402
+from repro.core.sweep import sweep_result_from_campaign          # noqa: E402
+from repro.core.vconfig import SCALAR_VL, series_label           # noqa: E402
+
+KNOB_LABEL = {"extra_latency": "added memory latency (cycles)",
+              "bw_limit": "Bandwidth Limiter (B/cycle)"}
+
+
+def _campaign_views(result: CampaignResult, normalized: bool):
+    """Yield (machine_name, knob, curves) projections of the stored cube.
+
+    Normalization (fig4/fig5 style) reuses ``SweepResult.normalized`` — one
+    definition of the anchor rule, shared with the claim checks — anchored
+    at each knob axis' smallest value (+0 latency / lowest bandwidth).
+    """
+    s = result.spec
+    knob = "bw_limit" if len(s.bandwidths) > 1 else "extra_latency"
+    anchor = min(s.bandwidths) if knob == "bw_limit" else min(s.latencies)
+    for mi, machine in enumerate(s.machines):
+        sr = sweep_result_from_campaign(result, knob=knob, machine=mi)
+        yield machine.name, knob, sr.normalized(anchor) if normalized else sr.data
+
+
+def _figure_name(campaign: str, machine: str, n_machines: int) -> str:
+    return campaign if n_machines == 1 else f"{campaign}_{machine}"
+
+
+# ---------------------------------------------------------------------------
+# Text fallback
+# ---------------------------------------------------------------------------
+
+
+def print_tables(campaign: str, machine: str, knob: str, curves: dict) -> None:
+    print(f"\n# {campaign} [{machine}] — value vs {KNOB_LABEL[knob]}")
+    for kernel, per_vl in curves.items():
+        knobs = sorted(next(iter(per_vl.values())))
+        head = " ".join(f"{k:>12}" for k in knobs)
+        print(f"{kernel:<10} {head}")
+        for vl in sorted(per_vl, key=lambda v: (v != SCALAR_VL, v)):
+            row = " ".join(f"{per_vl[vl][k]:>12.4g}" for k in knobs)
+            print(f"  {series_label(vl):<8} {row}")
+
+
+# ---------------------------------------------------------------------------
+# matplotlib path
+# ---------------------------------------------------------------------------
+
+
+def plot_figure(path: str, title: str, knob: str, curves: dict,
+                ylabel: str, logy: bool) -> str:
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    kernels = list(curves)
+    fig, axes = plt.subplots(
+        1, len(kernels), figsize=(4 * len(kernels), 3.2), sharex=True)
+    if len(kernels) == 1:
+        axes = [axes]
+    for ax, kernel in zip(axes, kernels):
+        per_vl = curves[kernel]
+        vls = sorted(per_vl, key=lambda v: (v != SCALAR_VL, v))
+        # scalar dashed black, vector series on a red gradient (the paper's
+        # palette: darker = longer vectors)
+        n_vec = max(sum(v != SCALAR_VL for v in vls), 1)
+        vec_i = 0
+        for vl in vls:
+            knobs = sorted(per_vl[vl])
+            ys = [per_vl[vl][k] for k in knobs]
+            if vl == SCALAR_VL:
+                ax.plot(knobs, ys, "k--", label=series_label(vl))
+            else:
+                shade = 0.25 + 0.75 * vec_i / n_vec
+                ax.plot(knobs, ys, color=(shade, 0.1, 0.1), marker="o",
+                        markersize=3, label=series_label(vl))
+                vec_i += 1
+        ax.set_title(kernel)
+        ax.set_xlabel(KNOB_LABEL[knob])
+        if logy:
+            ax.set_yscale("log")
+        ax.grid(True, alpha=0.3)
+    axes[0].set_ylabel(ylabel)
+    axes[-1].legend(fontsize=7)
+    fig.suptitle(title)
+    fig.tight_layout()
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path
+
+
+def render_campaign(name: str, result: CampaignResult, out: str,
+                    use_mpl: bool) -> list[str]:
+    normalized = name in ("paper-fig4", "paper-fig5")
+    ylabel = "slowdown vs anchor" if normalized else "modeled cycles"
+    written = []
+    n_machines = len(result.spec.machines)
+    for machine, knob, curves in _campaign_views(result, normalized):
+        if use_mpl:
+            fname = _figure_name(name, machine, n_machines) + ".png"
+            path = os.path.join(out, fname)
+            title = f"{name} ({machine})"
+            written.append(
+                plot_figure(path, title, knob, curves, ylabel,
+                            logy=not normalized))
+            print(f"wrote {path}")
+        else:
+            print_tables(name, machine, knob, curves)
+    return written
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--store", default="BENCH_sweeps.json",
+                    help="schema-versioned campaign store to read")
+    ap.add_argument("--out", default="plots",
+                    help="output directory for PNGs (matplotlib mode)")
+    ap.add_argument("--campaign", action="append", default=None,
+                    metavar="NAME", help="campaign(s) to render (default: "
+                    "all stored paper-fig* + machine-compare)")
+    ap.add_argument("--tables", action="store_true",
+                    help="force the text-table fallback even when "
+                         "matplotlib is available")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.store):
+        print(f"{args.store} not found — run a campaign first, e.g.\n"
+              f"  PYTHONPATH=src python -m benchmarks.run "
+              f"--campaign paper-fig3 --campaign paper-fig5")
+        return 1
+    # strict: a plotting run must not silently render an empty store when
+    # the document was written by a newer schema
+    store = SweepStore(args.store, strict=True)
+
+    names = args.campaign or [
+        n for n in store.names()
+        if n.startswith("paper-fig") or n == "machine-compare"]
+    # fig4 is a presentation of the fig3 cube: renderable whenever fig3 is
+    # stored, even if it was never "run" as its own campaign
+    available = []
+    for n in names:
+        if n in store.names():
+            available.append((n, store.get(n)))
+        elif n == "paper-fig4" and "paper-fig3" in store.names():
+            available.append((n, store.get("paper-fig3")))
+        else:
+            print(f"# campaign {n!r} not in {args.store}; have {store.names()}")
+    if "paper-fig3" in store.names() and not args.campaign \
+            and all(n != "paper-fig4" for n, _ in available):
+        available.append(("paper-fig4", store.get("paper-fig3")))
+
+    use_mpl = not args.tables
+    if use_mpl:
+        try:
+            import matplotlib  # noqa: F401
+        except ImportError:
+            print("# matplotlib not installed — falling back to text tables")
+            use_mpl = False
+    if use_mpl:
+        os.makedirs(args.out, exist_ok=True)
+
+    for n, result in available:
+        render_campaign(n, result, args.out, use_mpl)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

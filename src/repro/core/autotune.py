@@ -159,6 +159,8 @@ def tune_sell_layout(
     candidates_c: Sequence[int] | None = None,
     sigma_factors: Sequence[int] = (1, 4, 8, 32),
     vmem_budget: float = VMEM_BUDGET_BYTES,
+    cache=None,
+    cache_key: str | None = None,
 ) -> SellTuneResult:
     """Co-select (C, sigma, w_block) for the SELL SpMV kernel.
 
@@ -166,7 +168,17 @@ def tune_sell_layout(
     produce on the given row-length distribution, feeds it into the SpMV
     transaction trace, and scores SDV-modeled cycles — the paper's co-design
     loop driving a real layout choice instead of only printing a table.
+
+    ``cache``/``cache_key`` plug in a persistent tune store (duck-typed
+    ``get_sell``/``put_sell``, e.g. :class:`repro.service.tunecache.TuneCache`):
+    the cache is consulted *before* any pad factor is measured, so a warm
+    entry makes this call free, and a miss records its result for the next
+    process.
     """
+    if cache is not None and cache_key is not None:
+        hit = cache.get_sell(cache_key)
+        if hit is not None:
+            return hit
     machine = machine or tpu_v5e_machine()
     lengths = np.asarray(row_lengths, np.int64)
     n_rows = len(lengths)
@@ -175,6 +187,11 @@ def tune_sell_layout(
     cands = list(candidates_c) if candidates_c is not None else [
         v for v in candidate_vls(max_vl=1024) if v <= max(n_rows, SUBLANE)
     ] or [SUBLANE]
+    # Honor the machine's declared ISA cap: a short-vector machine
+    # (MachineParams.max_vl, e.g. the sve/avx512-like presets) must never
+    # be handed a C it cannot execute.
+    if machine.max_vl > 0:
+        cands = [c for c in cands if machine.supports_vl(c)] or [machine.max_vl]
     sdv = SDVMachine(machine)
     # The x vector stays VMEM-resident for every candidate (kernel design),
     # so it is part of each footprint; the slab tile is double-buffered
@@ -198,7 +215,7 @@ def tune_sell_layout(
         raise ValueError("no (C, sigma) candidate fits the VMEM budget")
     best = min(rows, key=lambda r: r[3])
     max_w = int(lengths.max()) if n_rows else 1
-    return SellTuneResult(
+    result = SellTuneResult(
         c=best[0],
         sigma=best[1],
         # The tile budget is whatever the x-resident vector leaves over, so
@@ -211,6 +228,9 @@ def tune_sell_layout(
         pad_factor=best[2],
         table=tuple(rows),
     )
+    if cache is not None and cache_key is not None:
+        cache.put_sell(cache_key, result)
+    return result
 
 
 def align_block(dim: int, multiple: int = LANE) -> int:

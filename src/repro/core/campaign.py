@@ -24,14 +24,17 @@ plus arbitrary user-defined cubes via :class:`CampaignSpec` directly.
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import time
-import warnings
 from typing import Callable, Iterator, Mapping, Sequence
 
 import numpy as np
 
+from repro.core.jsonstore import (
+    atomic_write_json,
+    check_schema_version,
+    load_json,
+)
 from repro.core.sdv import MachineParams, evaluate_cube, PAPER_BANDWIDTHS, PAPER_LATENCIES
 from repro.core.traffic import TRACE_BUILDERS, build_trace_grid
 from repro.core.vconfig import PAPER_VLS, SCALAR_VL
@@ -347,6 +350,44 @@ def hbm_like_machine(**kw) -> MachineParams:
     return MachineParams(**defaults)
 
 
+def sve_like_machine(**kw) -> MachineParams:
+    """A64FX-class SVE-512 core: vectors cap at 8 f64 elements (``max_vl=8``)
+    while the memory system is HBM2-class — the short-vector counterexample
+    the paper argues against (plenty of bandwidth, not enough elements per
+    instruction to amortize the round-trip)."""
+    defaults = dict(
+        name="sve-like",
+        lanes=8,                       # 512-bit datapath
+        max_vl=8,
+        base_mem_latency=130,
+        peak_bw_bytes_per_cycle=128.0,
+        bw_limit_bytes_per_cycle=128.0,
+        vector_mlp=4,
+        mshr=64,
+    )
+    defaults.update(kw)
+    return MachineParams(**defaults)
+
+
+def avx512_like_machine(**kw) -> MachineParams:
+    """Server-class AVX-512 core: the same 8-element f64 cap, DDR-class
+    latency/bandwidth per core and weak gather throughput — short vectors on
+    a commodity memory system."""
+    defaults = dict(
+        name="avx512-like",
+        lanes=8,
+        max_vl=8,
+        base_mem_latency=90,
+        peak_bw_bytes_per_cycle=16.0,
+        bw_limit_bytes_per_cycle=16.0,
+        vector_mlp=2,
+        mshr=48,
+        gather_ports=2,
+    )
+    defaults.update(kw)
+    return MachineParams(**defaults)
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
@@ -402,12 +443,15 @@ def _machine_compare() -> CampaignSpec:
 
     return CampaignSpec(
         name="machine-compare",
-        vls=(SCALAR_VL, 64, 256),
+        vls=(SCALAR_VL, 8, 64, 256),
         latencies=(0, 128, 512),
         bandwidths=(BW_UNLIMITED,),
-        machines=(ddr_like_machine(), hbm_like_machine(), tpu_v5e_machine()),
+        machines=(ddr_like_machine(), hbm_like_machine(), tpu_v5e_machine(),
+                  sve_like_machine(), avx512_like_machine()),
         description="Cross-machine run (Lee et al. style): DDR-like vs "
-                    "HBM-like vs TPU-v5e constants over the same kernel grid.",
+                    "HBM-like vs TPU-v5e vs short-vector SVE/AVX-512-like "
+                    "parameter sets over the same kernel grid (VL=8 is the "
+                    "longest series the short-vector machines can execute).",
     )
 
 
@@ -432,25 +476,22 @@ class SweepStore:
     so a reloaded cube compares ``==`` to the one that was stored.
     """
 
-    def __init__(self, path: str = "BENCH_sweeps.json"):
+    def __init__(self, path: str = "BENCH_sweeps.json", strict: bool = False):
+        """``strict=False`` (default) keeps the historical writer-friendly
+        behavior: an incompatible document is warned about and ignored (the
+        store is a regenerable artifact and must not wedge the writer that
+        would replace it).  ``strict=True`` raises
+        :class:`repro.core.jsonstore.SchemaVersionError` instead — the mode
+        for readers that must not silently drop data (e.g. plotting a store
+        produced by a newer build)."""
         self.path = path
         self._campaigns: dict[str, CampaignResult] = {}
         if os.path.exists(path):
-            self._load()
+            self._load(strict)
 
-    def _load(self) -> None:
-        with open(self.path) as f:
-            doc = json.load(f)
-        version = doc.get("schema_version")
-        if version != SCHEMA_VERSION:
-            # The store is a regenerable artifact: an incompatible document
-            # must not wedge the writer that would replace it.  Start fresh
-            # (the stale file is only overwritten on the next save()).
-            warnings.warn(
-                f"{self.path}: schema_version {version!r} != supported "
-                f"{SCHEMA_VERSION}; ignoring the stale store (it will be "
-                f"replaced on the next save)",
-                RuntimeWarning, stacklevel=3)
+    def _load(self, strict: bool) -> None:
+        doc = load_json(self.path)
+        if not check_schema_version(doc, SCHEMA_VERSION, self.path, strict):
             self._campaigns = {}
             return
         self._campaigns = {
@@ -477,8 +518,4 @@ class SweepStore:
             "schema_version": SCHEMA_VERSION,
             "campaigns": {n: r.to_json() for n, r in sorted(self._campaigns.items())},
         }
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(doc, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
-        return self.path
+        return atomic_write_json(self.path, doc)

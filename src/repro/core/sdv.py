@@ -76,9 +76,20 @@ class MachineParams:
     # element requests issued per cycle (one per lane).
     gather_ports: int = 8
 
+    # Longest vector the ISA exposes, in f64 elements (0 = unbounded).  The
+    # analytic model happily evaluates any requested VL — this field exists
+    # so short-vector presets (SVE-512 / AVX-512) can declare which slice of
+    # a campaign's VL axis the real machine could execute, and claim checks
+    # / the serving tuner restrict themselves to it.
+    max_vl: int = 0
+
     # --- knobs: the two hardware modules of the paper -------------------
     extra_latency: int = 0            # Latency Controller (cycles added)
     bw_limit_bytes_per_cycle: float = 64.0  # Bandwidth Limiter (B/cycle)
+
+    def supports_vl(self, vl: int) -> bool:
+        """Can the real machine execute this VL (scalar always counts)?"""
+        return self.max_vl <= 0 or vl <= self.max_vl
 
     # -- derived ----------------------------------------------------------
     @property

@@ -9,8 +9,6 @@ same call sites run interpreted on CPU and compiled on real hardware.
 """
 from __future__ import annotations
 
-import warnings
-
 import numpy as np
 
 import jax
@@ -48,14 +46,54 @@ def default_interpret() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def _repack_warn(matrix, vl: int):
-    """Repack a matrix whose slice width disagrees with the requested vl."""
-    warnings.warn(
-        f"matrix packed with C={matrix.c}, requested vl={vl}: repacking "
-        "(pack with the target vl to avoid this cost)",
-        stacklevel=3,
-    )
-    return to_csr(matrix)
+_DEFAULT_CACHE = None
+
+
+def default_tune_cache():
+    """Process-wide in-memory TuneCache backing the repack-on-mismatch path.
+
+    Serving stacks construct their own persistent cache and pass it
+    explicitly; this default exists so ad-hoc ``spmv`` calls still stop
+    paying for the same repack twice.  Its packed-slab memo is kept small
+    (8 entries, LRU) because slabs are O(nnz) and callers never opted into
+    retention; :func:`reset_default_tune_cache` releases everything.
+    Imported lazily: the service layer sits above kernels, so the
+    dependency must not bind at module import.
+    """
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None:
+        from repro.service.tunecache import TuneCache
+
+        _DEFAULT_CACHE = TuneCache(max_packed=8)
+    return _DEFAULT_CACHE
+
+
+def reset_default_tune_cache() -> None:
+    """Drop the process-wide repack memo (frees the retained slabs)."""
+    global _DEFAULT_CACHE
+    _DEFAULT_CACHE = None
+
+
+def _repack_cached(matrix, vl: int, sigma: int | None, cache) -> SellSlabs:
+    """Repack a matrix whose slice width disagrees with the requested vl.
+
+    The repacked slabs are memoized in the TuneCache (keyed by content
+    signature + target layout) and the event is recorded in the cache's
+    persisted repack ledger — the second call with the same operand reuses
+    the layout instead of warning and redoing the work.
+    """
+    from repro.service.tunecache import operand_signature
+
+    cache = cache if cache is not None else default_tune_cache()
+    sig = operand_signature(matrix)
+    sigma = int(sigma or 8 * vl)
+    key = ("repack", sig.key, vl, sigma)
+    slabs = cache.packed_get(key)
+    if slabs is None:
+        slabs = csr_to_sell_slabs(to_csr(matrix), c=vl, sigma=sigma)
+        cache.packed_put(key, slabs)
+        cache.note_repack(f"repack|{sig.key}|c{vl}|sigma{sigma}")
+    return slabs
 
 
 def _spmv_slabs(slabs: SellSlabs, x, *, w_block: int, interpret: bool) -> jnp.ndarray:
@@ -78,6 +116,7 @@ def spmv(
     sigma: int | None = None,
     w_block: int = 8,
     interpret: bool | None = None,
+    cache=None,
 ) -> jnp.ndarray:
     """y = A @ x, dispatching the kernel that matches the matrix format.
 
@@ -86,12 +125,14 @@ def spmv(
     * :class:`SellSlabs` / :class:`SellCSigmaMatrix` — bucketed kernel;
     * :class:`EllpackMatrix` — the uniform-width kernel.
 
-    A pre-packed matrix whose C disagrees with ``vl`` is repacked with a
-    warning instead of failing.
+    A pre-packed matrix whose C disagrees with ``vl`` is repacked once and
+    the layout is memoized in the TuneCache (``cache``, defaulting to the
+    process-wide :func:`default_tune_cache`): repeated calls with the same
+    operand reuse the repacked slabs instead of discarding the work.
     """
     interpret = default_interpret() if interpret is None else interpret
     if not isinstance(matrix, CSRMatrix) and matrix.c != vl:
-        matrix = _repack_warn(matrix, vl)
+        matrix = _repack_cached(matrix, vl, sigma, cache)
     if isinstance(matrix, CSRMatrix):
         matrix = csr_to_sell_slabs(matrix, c=vl, sigma=sigma)
     if isinstance(matrix, SellCSigmaMatrix):
@@ -109,7 +150,8 @@ def spmv(
 
 
 def pack_tuned(
-    matrix: CSRMatrix, machine=None
+    matrix: CSRMatrix, machine=None, cache=None, device: str | None = None,
+    candidates_c=None, signature=None,
 ) -> tuple[SellSlabs, SellTuneResult]:
     """Autotune (C, sigma, w_block) for this matrix and pack it.
 
@@ -120,11 +162,83 @@ def pack_tuned(
 
         slabs, tuned = pack_tuned(csr)
         y = spmv(slabs, x, vl=tuned.c, w_block=tuned.w_block)
+
+    Passing a ``cache`` (:class:`repro.service.tunecache.TuneCache`) makes
+    the tune a pay-once cost per operand signature: a warm cache answers
+    without measuring a single pad factor, and the packed slabs themselves
+    are memoized by (signature, C, sigma).
     """
-    tuned = tune_sell_layout(
-        matrix.row_lengths, n_cols=matrix.n_cols, machine=machine
+    base_key = None
+    if cache is not None:
+        from repro.core.sdv import tpu_v5e_machine
+
+        if device is None:
+            device = jax.default_backend()
+        # the key must name the machine the tune scores against, so resolve
+        # the tuner's default before keying; callers that already
+        # fingerprinted the operand pass ``signature`` to skip re-hashing
+        machine = machine if machine is not None else tpu_v5e_machine()
+        base_key = cache.sell_key(
+            "spmv", signature if signature is not None else matrix,
+            device=device, dtype=str(matrix.data.dtype), machine=machine)
+    return tune_and_pack(
+        matrix.row_lengths,
+        lambda t: csr_to_sell_slabs(matrix, c=t.c, sigma=t.sigma),
+        n_cols=matrix.n_cols, machine=machine,
+        candidates_c=candidates_c, cache=cache, base_key=base_key,
     )
-    return csr_to_sell_slabs(matrix, c=tuned.c, sigma=tuned.sigma), tuned
+
+
+def cached_tune_sell(
+    row_lengths, n_cols=None, machine=None, candidates_c=None,
+    cache=None, base_key: str | None = None,
+) -> SellTuneResult:
+    """The one cached-tune protocol (shared by :func:`pack_tuned` and the
+    service registry's graph path).
+
+    A narrowed candidate sweep is a different experiment than the full
+    grid, so hinted results live under a ``|cands...``-suffixed key and can
+    never masquerade as a full-sweep tune.  On a hinted miss the full-grid
+    entry is consulted first — an operand the cache has already seen is
+    never re-measured just because hints appeared (or disappeared) since.
+    """
+    key = base_key
+    if candidates_c is not None and base_key is not None:
+        key = base_key + "|cands" + "-".join(map(str, sorted(candidates_c)))
+        if cache is not None:
+            full = cache.get_sell(base_key)
+            if full is not None:
+                return full
+    return tune_sell_layout(
+        row_lengths, n_cols=n_cols, machine=machine,
+        candidates_c=candidates_c, cache=cache, cache_key=key,
+    )
+
+
+def tune_and_pack(
+    row_lengths, pack_fn, n_cols=None, machine=None, candidates_c=None,
+    cache=None, base_key: str | None = None,
+):
+    """Cached tune + memoized pack — the full serving protocol, shared by
+    :func:`pack_tuned` (matrices) and the registry's graph path.
+
+    ``pack_fn(tuned)`` builds the layout for the winning (C, sigma); the
+    result is memoized under ``(base_key, C, sigma)`` — the layout depends
+    only on content and the chosen shape, so hinted and full-sweep tunes
+    share packed slabs.
+    """
+    tuned = cached_tune_sell(
+        row_lengths, n_cols=n_cols, machine=machine,
+        candidates_c=candidates_c, cache=cache, base_key=base_key,
+    )
+    if cache is not None and base_key is not None:
+        packed_key = (base_key, tuned.c, tuned.sigma)
+        layout = cache.packed_get(packed_key)
+        if layout is None:
+            layout = pack_fn(tuned)
+            cache.packed_put(packed_key, layout)
+        return layout, tuned
+    return pack_fn(tuned), tuned
 
 
 # ---------------------------------------------------------------------------

@@ -6,12 +6,16 @@ finishes, its slot is refilled by prefilling the next queued prompt into the
 shared cache at that batch index.  This is the slot-based continuous
 batching used by production TPU serving (shapes never change, utilization
 stays high under ragged request lengths).
+
+The admission/eviction loop itself lives in :class:`repro.serve.slots.SlotLoop`
+— the same core the sparse-kernel service batches on — so this module only
+contributes the LM-specific hooks: prefill-and-splice on admission and one
+shared decode step per scheduling round.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Any
+from typing import Any, Sequence
 
 import numpy as np
 
@@ -22,6 +26,7 @@ from repro.compat import concrete_mesh, use_mesh
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serve.engine import GenerationConfig, sample_token
+from repro.serve.slots import SlotLoop
 
 
 @dataclasses.dataclass
@@ -36,18 +41,16 @@ class Request:
         return len(self.generated) >= self.max_new_tokens
 
 
-class Batcher:
+class Batcher(SlotLoop[Request]):
     """Slot-multiplexed decode over a fixed batch width."""
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  gcfg: GenerationConfig | None = None, mesh=None):
+        super().__init__(n_slots)
         self.cfg = cfg
         self.params = params
         self.gcfg = gcfg or GenerationConfig()
-        self.n_slots = n_slots
         self.mesh = mesh
-        self.queue: deque[Request] = deque()
-        self.slots: list[Request | None] = [None] * n_slots
         with use_mesh(mesh):
             self.caches = M.init_caches(
                 cfg, n_slots, max_len=self.gcfg.cache_len, dtype=self.gcfg.dtype
@@ -62,70 +65,45 @@ class Batcher:
             self.caches = jax.device_put(
                 self.caches, S.cache_shardings(m, cfg, self.caches, n_slots)
             )
-        self.completed: list[Request] = []
         self._next_tok = np.zeros((n_slots,), np.int32)
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    # -- SlotLoop hooks ----------------------------------------------------
+    def done(self, req: Request) -> bool:
+        return req.done
 
-    # -- internals ---------------------------------------------------------
-    def _fill_slots(self):
-        """Prefill queued prompts into free slots (one at a time: per-slot
+    def admit(self, slot: int, req: Request) -> None:
+        """Prefill the admitted prompt into its slot (one at a time: per-slot
         cache writes via the batched API with masking would need slot-level
         cache surgery; at this scale a single-request prefill re-run into the
         slot's batch row is the simple correct thing — noted as future work
         to batch)."""
-        for i in range(self.n_slots):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
-                self.slots[i] = req
-                # single-row prefill: run the prompt through a b=1 cache and
-                # splice it into row i of the shared cache
-                with use_mesh(self.mesh):
-                    one = M.init_caches(self.cfg, 1, max_len=self.gcfg.cache_len,
-                                        dtype=self.gcfg.dtype)
-                logits, one = M.prefill(
-                    self.params, self.cfg,
-                    {"tokens": jnp.asarray(req.prompt[None])}, one,
-                    dtype=self.gcfg.dtype, mesh=self.mesh,
-                )
-                self.caches = _splice_caches(self.caches, one, i)
-                tok = int(np.asarray(jnp.argmax(logits[0, -1])))
-                req.generated.append(tok)
-                self._next_tok[i] = tok
+        # single-row prefill: run the prompt through a b=1 cache and
+        # splice it into row ``slot`` of the shared cache
+        with use_mesh(self.mesh):
+            one = M.init_caches(self.cfg, 1, max_len=self.gcfg.cache_len,
+                                dtype=self.gcfg.dtype)
+        logits, one = M.prefill(
+            self.params, self.cfg,
+            {"tokens": jnp.asarray(req.prompt[None])}, one,
+            dtype=self.gcfg.dtype, mesh=self.mesh,
+        )
+        self.caches = _splice_caches(self.caches, one, slot)
+        tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+        req.generated.append(tok)
+        self._next_tok[slot] = tok
 
-    def _evict_done(self):
-        for i, req in enumerate(self.slots):
-            if req is not None and req.done:
-                self.completed.append(req)
-                self.slots[i] = None
-
-    def step(self):
+    def execute(self, active: Sequence[tuple[int, Request]]) -> None:
         """One decode step across all active slots."""
-        self._evict_done()
-        self._fill_slots()
-        if all(r is None for r in self.slots):
-            return False
         toks = jnp.asarray(self._next_tok)[:, None]
         logits, self.caches = M.decode_step(
             self.params, self.cfg, toks, self.caches, dtype=self.gcfg.dtype,
             mesh=self.mesh,
         )
         nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
-        for i, req in enumerate(self.slots):
-            if req is not None and not req.done:
+        for i, req in active:
+            if not req.done:
                 req.generated.append(int(nxt[i]))
                 self._next_tok[i] = nxt[i]
-        return True
-
-    def run(self, max_steps: int = 10_000) -> list[Request]:
-        steps = 0
-        while (self.queue or any(self.slots)) and steps < max_steps:
-            if not self.step():
-                break
-            steps += 1
-        self._evict_done()
-        return self.completed
 
 
 def _splice_caches(shared, single, slot: int):

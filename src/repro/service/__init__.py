@@ -1,0 +1,28 @@
+"""Sparse-kernel serving subsystem: registry -> tune cache -> request engine.
+
+The layer that makes the paper kernels callable as a system: operands
+(matrices, graphs, FFT plans) are registered once — packed to SELL slabs and
+(C, sigma, w_block)-tuned through a persistent, campaign-warmable
+:class:`TuneCache` — and then served to concurrent requests by a
+:class:`KernelService` that micro-batches on the same slot-admission core as
+the LM batcher.  See README "Serving the kernels".
+"""
+from repro.service.registry import KernelRegistry, RegisteredOperand
+from repro.service.service import KernelRequest, KernelService
+from repro.service.tunecache import (
+    OperandSignature,
+    SchemaVersionError,
+    TuneCache,
+    operand_signature,
+)
+
+__all__ = [
+    "KernelRegistry",
+    "KernelRequest",
+    "KernelService",
+    "OperandSignature",
+    "RegisteredOperand",
+    "SchemaVersionError",
+    "TuneCache",
+    "operand_signature",
+]

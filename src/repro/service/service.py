@@ -1,0 +1,274 @@
+"""Request-driven execution engine for the paper's sparse kernels.
+
+:class:`KernelService` turns SpMV / BFS / PageRank / FFT into a serving
+surface with the async submit/poll shape of :mod:`repro.serve.engine`:
+``submit`` enqueues and returns a request id immediately, ``poll`` reports a
+result when one exists, and ``step``/``run``/``drain`` advance the scheduler.
+
+Scheduling is the same slot-based admission loop the LM batcher runs
+(:class:`repro.serve.slots.SlotLoop` — one batching core, two engines).  The
+service's ``execute`` hook is where kernel-specific coalescing happens: all
+active requests against the same registered operand form one group per
+scheduling round, so
+
+* FFT requests of equal length are stacked into a single batched
+  ``fft_stockham`` call (true micro-batching — the kernel has a batch axis);
+* SpMV / BFS / PageRank groups share one set of prebuilt device slabs and
+  tuned (C, sigma, w_block) — zero per-request packing or tuning; the
+  per-request kernel launches reuse the group's arrays (a multi-RHS SpMV
+  kernel would collapse these further; noted as future work).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.service.registry import KernelRegistry, RegisteredOperand
+from repro.serve.slots import SlotLoop
+
+OPS = ("spmv", "bfs", "pagerank", "fft")
+
+
+@dataclasses.dataclass
+class KernelRequest:
+    rid: int
+    op: str                     # one of OPS
+    operand: str                # registry name
+    payload: Any = None         # x vector / (b, n) signal / None
+    params: dict = dataclasses.field(default_factory=dict)
+    result: Any = None
+    error: str | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None or self.error is not None
+
+
+class KernelService(SlotLoop[KernelRequest]):
+    """Micro-batching scheduler over a :class:`KernelRegistry`."""
+
+    def __init__(self, registry: KernelRegistry, n_slots: int = 8,
+                 interpret: bool | None = None):
+        super().__init__(n_slots)
+        from repro.kernels.ops import default_interpret
+
+        self.registry = registry
+        self.interpret = default_interpret() if interpret is None else interpret
+        self._next_rid = 0
+        self._by_rid: dict[int, KernelRequest] = {}
+        self.stats = {
+            "submitted": 0, "served": 0, "failed": 0, "steps": 0,
+            "groups": 0, "coalesced": 0, "max_group": 0,
+        }
+
+    # -- async API ---------------------------------------------------------
+    def submit(self, op: str, operand: str, payload: Any = None,
+               **params) -> int:
+        """Enqueue one kernel request; returns its request id immediately."""
+        if op not in OPS:
+            raise ValueError(f"unknown op {op!r}: expected one of {OPS}")
+        self.registry.get(operand)          # fail fast on unknown operands
+        rid = self._next_rid
+        self._next_rid += 1
+        req = KernelRequest(rid=rid, op=op, operand=operand,
+                            payload=payload, params=dict(params))
+        self._by_rid[rid] = req
+        super().submit(req)
+        self.stats["submitted"] += 1
+        return rid
+
+    def poll(self, rid: int) -> Any | None:
+        """Result of request ``rid`` if it finished, else None.  Raises on a
+        failed request (the error travels to the caller, not the log)."""
+        req = self._by_rid[rid]
+        if req.error is not None:
+            raise RuntimeError(f"request {rid} ({req.op}) failed: {req.error}")
+        return req.result
+
+    def release(self, rid: int) -> None:
+        """Drop a delivered request and its result.  Long-running servers
+        call this after ``poll`` shows the request finished — without it
+        every request's result array is retained for the life of the
+        service.  Releasing an unfinished request is refused (it would
+        complete later and land in ``completed`` with no handle left to
+        remove it — the exact leak this method exists to prevent)."""
+        req = self._by_rid.get(rid)
+        if req is None:
+            return
+        if not req.done:
+            raise ValueError(
+                f"request {rid} has not finished; poll() until it completes "
+                "before releasing it")
+        self._by_rid.pop(rid)
+        # a finished request may still be sitting in its slot (released
+        # between execute and the next eviction round): clear the slot so
+        # _evict_done cannot resurrect it into `completed` later
+        for i, occupant in enumerate(self.slots):
+            if occupant is req:
+                self.retire(req)           # keep served/failed stats honest
+                self.slots[i] = None
+                return
+        try:
+            self.completed.remove(req)
+        except ValueError:
+            pass
+
+    def drain(self, max_steps: int = 10_000) -> list[KernelRequest]:
+        """Run the loop until every submitted request completes."""
+        return self.run(max_steps=max_steps)
+
+    # -- SlotLoop hooks ----------------------------------------------------
+    def done(self, req: KernelRequest) -> bool:
+        return req.done
+
+    def retire(self, req: KernelRequest) -> None:
+        self.stats["served" if req.error is None else "failed"] += 1
+
+    def execute(self, active: Sequence[tuple[int, KernelRequest]]) -> None:
+        self.stats["steps"] += 1
+        groups: dict[tuple[str, str], list[KernelRequest]] = {}
+        for _, req in active:
+            if not req.done:
+                groups.setdefault((req.op, req.operand), []).append(req)
+        for (op, operand), reqs in groups.items():
+            self.stats["groups"] += 1
+            self.stats["max_group"] = max(self.stats["max_group"], len(reqs))
+            if len(reqs) > 1:
+                self.stats["coalesced"] += len(reqs)
+            try:
+                self._run_group(op, self.registry.get(operand), reqs)
+            except Exception as exc:  # noqa: BLE001 - errors belong to requests
+                for req in reqs:
+                    if not req.done:
+                        req.error = f"{type(exc).__name__}: {exc}"
+
+    # -- kernel dispatch ---------------------------------------------------
+    def _run_group(self, op: str, operand: RegisteredOperand,
+                   reqs: list[KernelRequest]) -> None:
+        runner = getattr(self, f"_run_{op}")
+        runner(operand, reqs)
+
+    @staticmethod
+    def _per_request(req: KernelRequest, call) -> None:
+        """Per-request launch isolation: one bad payload fails its own
+        request, never its coalesced groupmates (the group-level except in
+        ``execute`` only backstops failures shared by construction, like an
+        operand-kind mismatch or the single batched FFT launch)."""
+        try:
+            call()
+        except Exception as exc:  # noqa: BLE001 - errors belong to requests
+            req.error = f"{type(exc).__name__}: {exc}"
+
+    def _run_spmv(self, operand, reqs):
+        from repro.kernels import sell as sell_k
+
+        if operand.kind != "matrix":
+            raise TypeError(f"operand {operand.name!r} is not a matrix")
+        import jax.numpy as jnp
+
+        arrs, tuned = operand.device_arrays, operand.tuned
+        n_cols = operand.slabs.n_cols
+        for req in reqs:
+            def call(req=req):
+                # JAX clamps out-of-bounds gathers, so a wrong-sized x would
+                # return garbage as a "success" — validate explicitly
+                x = np.asarray(req.payload, np.float64)
+                if x.shape != (n_cols,):
+                    raise ValueError(
+                        f"x must have shape ({n_cols},), got {x.shape}")
+                y = sell_k.spmv_sell(
+                    arrs["cols"], arrs["vals"], arrs["rows"],
+                    jnp.asarray(x),
+                    n_rows=operand.n, w_block=tuned.w_block,
+                    interpret=self.interpret,
+                )
+                req.result = np.asarray(y)
+
+            self._per_request(req, call)
+
+    def _run_bfs(self, operand, reqs):
+        from repro.kernels import bfs as bfs_k
+
+        if operand.kind != "graph":
+            raise TypeError(f"operand {operand.name!r} is not a graph")
+        arrs = operand.device_arrays
+        for req in reqs:
+            def call(req=req):
+                source = int(req.params.get("source", 0))
+                if not 0 <= source < operand.n:
+                    raise ValueError(
+                        f"source {source} out of range [0, {operand.n})")
+                dist = bfs_k.bfs_sell(
+                    arrs["adj"], arrs["nodes"], operand.n, source,
+                    interpret=self.interpret,
+                )
+                req.result = np.asarray(dist)
+
+            self._per_request(req, call)
+
+    def _run_pagerank(self, operand, reqs):
+        from repro.kernels import pagerank as pr_k
+
+        if operand.kind != "graph":
+            raise TypeError(f"operand {operand.name!r} is not a graph")
+        arrs = operand.device_arrays
+        for req in reqs:
+            def call(req=req):
+                rank = pr_k.pagerank_sell(
+                    arrs["adj"], arrs["nodes"], arrs["out_degree"], operand.n,
+                    damping=float(req.params.get("damping", 0.85)),
+                    iters=int(req.params.get("iters", 20)),
+                    interpret=self.interpret,
+                )
+                req.result = np.asarray(rank)
+
+            self._per_request(req, call)
+
+    def _run_fft(self, operand, reqs):
+        """True micro-batch: stack every request's signal rows into one
+        batched Stockham call against the operand's precomputed twiddles."""
+        from repro.kernels import fft as fft_k
+
+        if operand.kind != "fft":
+            raise TypeError(f"operand {operand.name!r} is not an fft plan")
+        import jax.numpy as jnp
+
+        n = operand.n
+        good, rows, spans = [], [], []
+        for req in reqs:
+            # validate per request BEFORE stacking: one malformed signal
+            # must fail its own request, not its coalesced groupmates —
+            # including when the validation itself raises (ragged lists)
+            try:
+                if np.iscomplexobj(req.payload):
+                    # float64 casting would silently drop the imaginary plane
+                    raise TypeError("complex signals are not supported; "
+                                    "pass split re/im planes")
+                sig = np.atleast_2d(np.asarray(req.payload, np.float64))
+                if sig.ndim != 2:
+                    raise ValueError(f"signal must be 1-D or 2-D (batch, n), "
+                                     f"got shape {sig.shape}")
+                if sig.shape[0] == 0:
+                    raise ValueError("empty signal batch (0 rows)")
+                if sig.shape[-1] != n:
+                    raise ValueError(f"signal length {sig.shape[-1]} != "
+                                     f"registered fft length {n}")
+            except Exception as exc:  # noqa: BLE001 - belongs to the request
+                req.error = f"{type(exc).__name__}: {exc}"
+                continue
+            spans.append((len(rows), len(rows) + sig.shape[0]))
+            rows.extend(sig)
+            good.append(req)
+        if not good:
+            return
+        batch = jnp.asarray(np.stack(rows))
+        re, im = fft_k.fft_stockham(
+            batch, jnp.zeros_like(batch),
+            operand.device_arrays["wre"], operand.device_arrays["wim"],
+            b_block=min(8, batch.shape[0]), interpret=self.interpret,
+        )
+        re, im = np.asarray(re), np.asarray(im)
+        for req, (lo, hi) in zip(good, spans):
+            req.result = (re[lo:hi], im[lo:hi])

@@ -1,0 +1,357 @@
+"""Persistent autotune cache for the sparse-kernel serving subsystem.
+
+The expensive part of serving the paper's kernels is *picking* the layout —
+(C, sigma, w_block) against the operand's row-length distribution — not
+running them (:func:`repro.core.autotune.tune_sell_layout` measures dozens of
+candidate pad factors per call).  :class:`TuneCache` makes that a pay-once
+cost per operand *signature*:
+
+* keys are ``(kernel, device kind, operand signature, dtype)`` where the
+  signature (:func:`operand_signature`) fingerprints the operand's shape,
+  nnz and content digest — two operands with the same signature get the
+  same layout without re-measuring;
+* the store is schema-versioned JSON like
+  :class:`repro.core.campaign.SweepStore` (shared gate in
+  :mod:`repro.core.jsonstore`) — a future-versioned cache raises a clear
+  :class:`repro.core.jsonstore.SchemaVersionError` instead of a KeyError
+  deep inside a reader;
+* :meth:`TuneCache.warm_from_sweeps` seeds per-(kernel, machine) VL hints
+  offline from the campaign cubes in ``BENCH_sweeps.json``, so a fresh
+  serving node starts with the sweep campaign's verdicts instead of a cold
+  table;
+* a non-persisted packed-slab memo (:meth:`packed_get` / :meth:`packed_put`)
+  lets hot paths (``ops.spmv``'s repack-on-mismatch) reuse device layouts
+  they already built instead of discarding the work.
+
+``core.autotune`` consults the cache through the duck-typed
+``get_sell``/``put_sell`` pair, so the core layer never imports this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+from collections import OrderedDict
+from typing import Any, Iterable, Mapping
+
+import numpy as np
+
+from repro.core.autotune import SellTuneResult
+from repro.core.jsonstore import (
+    SchemaVersionError,
+    atomic_write_json,
+    check_schema_version,
+    load_json,
+)
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "OperandSignature",
+    "SchemaVersionError",
+    "TuneCache",
+    "operand_signature",
+]
+
+#: Version stamp of the tune-cache document layout.  Bump on any
+#: backwards-incompatible change to the entry encoding.
+SCHEMA_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Operand signatures
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSignature:
+    """Content fingerprint of a sparse operand.
+
+    ``digest`` hashes the operand's actual arrays (blake2b-128), so equal
+    signatures mean equal content — safe to key packed layouts on — while
+    the shape/nnz fields keep the key human-readable in the JSON store.
+    """
+
+    kind: str               # csr | ellpack | sell-slabs | graph | graph-slabs
+    n_rows: int
+    n_cols: int
+    nnz: int
+    digest: str
+
+    @property
+    def key(self) -> str:
+        return (f"{self.kind}:{self.n_rows}x{self.n_cols}"
+                f":nnz{self.nnz}:{self.digest}")
+
+
+def _digest(arrays: Iterable[np.ndarray]) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(np.asarray(a.shape, np.int64).tobytes())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def machine_tag(machine) -> str:
+    """Stable cache identifier of a :class:`~repro.core.sdv.MachineParams`.
+
+    The tune result depends on every machine constant, not just the name, so
+    the tag is ``name-<digest of all fields>`` — two same-named variants
+    (e.g. a throttled ``tpu-v5e``) can never share a cache entry.
+    """
+    d = dataclasses.asdict(machine)
+    h = hashlib.blake2b(repr(sorted(d.items())).encode(),
+                        digest_size=4).hexdigest()
+    return f"{d.get('name', 'machine')}-{h}"
+
+
+def operand_signature(obj: Any) -> OperandSignature:
+    """Fingerprint any supported sparse operand (matrix or graph)."""
+    from repro.graphs.gen import EllpackGraph, SellGraphSlabs
+    from repro.sparse.formats import (
+        CSRMatrix,
+        EllpackMatrix,
+        SellCSigmaMatrix,
+        SellSlabs,
+    )
+
+    if isinstance(obj, CSRMatrix):
+        return OperandSignature(
+            "csr", obj.n_rows, obj.n_cols, obj.nnz,
+            _digest((obj.indptr, obj.indices, obj.data)))
+    if isinstance(obj, EllpackMatrix):
+        return OperandSignature(
+            "ellpack", obj.n_rows, obj.n_cols, obj.nnz,
+            _digest((obj.cols, obj.vals)))
+    if isinstance(obj, SellSlabs):
+        return OperandSignature(
+            "sell-slabs", obj.n_rows, obj.n_cols, obj.nnz,
+            _digest((*obj.bucket_cols, *obj.bucket_vals, *obj.bucket_rows)))
+    if isinstance(obj, SellCSigmaMatrix):
+        return OperandSignature(
+            "sell", obj.n_rows, obj.n_cols, obj.nnz,
+            _digest((*obj.slice_cols, *obj.slice_vals, obj.perm)))
+    if isinstance(obj, EllpackGraph):
+        return OperandSignature(
+            "graph", obj.n_nodes, obj.n_nodes, obj.n_edges,
+            _digest((obj.adj,)))
+    if isinstance(obj, SellGraphSlabs):
+        return OperandSignature(
+            "graph-slabs", obj.n_nodes, obj.n_nodes, obj.n_edges,
+            _digest((*obj.bucket_adj, *obj.bucket_nodes)))
+    raise TypeError(f"unsupported operand type: {type(obj).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# The cache
+# ---------------------------------------------------------------------------
+
+
+def _result_to_json(r: SellTuneResult) -> dict:
+    return {
+        "c": int(r.c), "sigma": int(r.sigma), "w_block": int(r.w_block),
+        "cycles": float(r.cycles), "pad_factor": float(r.pad_factor),
+        "table": [[int(c), int(s), float(pf), float(cy)]
+                  for c, s, pf, cy in r.table],
+    }
+
+
+def _result_from_json(d: Mapping) -> SellTuneResult:
+    return SellTuneResult(
+        c=int(d["c"]), sigma=int(d["sigma"]), w_block=int(d["w_block"]),
+        cycles=float(d["cycles"]), pad_factor=float(d["pad_factor"]),
+        table=tuple((int(c), int(s), float(pf), float(cy))
+                    for c, s, pf, cy in d["table"]),
+    )
+
+
+class TuneCache:
+    """Schema-versioned persistence for kernel layout/tune decisions.
+
+    Document layout (``schema_version`` gates every reader)::
+
+        {"schema_version": 1,
+         "entries": {key: {"kernel", "device", "dtype", "source",
+                           "c", "sigma", "w_block", "cycles", "pad_factor",
+                           "table", "hits"}},
+         "hints":   {"kernel|machine": vl},
+         "repacks": {key: count}}
+
+    ``path=None`` keeps the cache in memory only (no persistence).  Loading
+    a document whose ``schema_version`` this build does not support raises
+    :class:`SchemaVersionError` by default — a newer tool wrote it, and
+    silently discarding a tune table the user paid for is worse than
+    stopping; pass ``strict=False`` to warn and start fresh instead.
+    """
+
+    def __init__(self, path: str | None = None, strict: bool = True,
+                 max_packed: int = 32):
+        self.path = path
+        self._entries: dict[str, dict] = {}
+        self._hints: dict[str, int] = {}
+        self._repacks: dict[str, int] = {}
+        #: in-memory packed-layout memo (device slabs are not JSON material);
+        #: LRU-bounded — slabs are O(nnz) each, and a long-running process
+        #: must not retain one per operand it ever served
+        self._packed: "OrderedDict[tuple, Any]" = OrderedDict()
+        self.max_packed = max_packed
+        self.hits = 0
+        self.misses = 0
+        if path is not None and os.path.exists(path):
+            self._load(strict)
+
+    def _load(self, strict: bool) -> None:
+        doc = load_json(self.path)
+        if not check_schema_version(doc, SCHEMA_VERSION, self.path, strict):
+            return
+        self._entries = dict(doc.get("entries", {}))
+        self._hints = {k: int(v) for k, v in doc.get("hints", {}).items()}
+        self._repacks = {k: int(v) for k, v in doc.get("repacks", {}).items()}
+
+    def save(self) -> str:
+        if self.path is None:
+            raise ValueError("TuneCache was created without a path")
+        doc = {
+            "schema_version": SCHEMA_VERSION,
+            "entries": self._entries,
+            "hints": self._hints,
+            "repacks": self._repacks,
+        }
+        return atomic_write_json(self.path, doc)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- keys --------------------------------------------------------------
+    @staticmethod
+    def sell_key(kernel: str, signature: OperandSignature | Any,
+                 device: str = "cpu", dtype: str = "float64",
+                 machine=None) -> str:
+        """Cache key for a SELL layout decision.
+
+        ``signature`` may be an :class:`OperandSignature` or a raw operand
+        (fingerprinted on the spot).  ``machine`` is the
+        :class:`~repro.core.sdv.MachineParams` the tune scores against —
+        part of the key because the chosen layout depends on it (callers
+        must pass the *effective* machine, i.e. resolve their default
+        before keying).
+        """
+        if not isinstance(signature, OperandSignature):
+            signature = operand_signature(signature)
+        mtag = machine_tag(machine) if machine is not None else "any-machine"
+        return f"{kernel}|{device}|{dtype}|{mtag}|{signature.key}"
+
+    # -- tune entries (the duck-typed protocol core.autotune consults) -----
+    def get_sell(self, key: str) -> SellTuneResult | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        entry["hits"] = int(entry.get("hits", 0)) + 1
+        return _result_from_json(entry)
+
+    def put_sell(self, key: str, result: SellTuneResult,
+                 source: str = "measured") -> None:
+        kernel, device, dtype, mtag = (key.split("|", 4) + [""] * 4)[:4]
+        entry = _result_to_json(result)
+        entry.update(kernel=kernel, device=device, dtype=dtype,
+                     machine=mtag, source=source, hits=0)
+        self._entries[key] = entry
+
+    # -- repack bookkeeping (ops.spmv's mismatch path) ---------------------
+    def note_repack(self, key: str) -> int:
+        """Record that an operand had to be repacked at serve time; the
+        count persists so repeated mismatches show up in the artifact."""
+        self._repacks[key] = self._repacks.get(key, 0) + 1
+        return self._repacks[key]
+
+    @property
+    def repacks(self) -> dict[str, int]:
+        return dict(self._repacks)
+
+    # -- packed-layout memo (in-memory only, LRU-bounded) ------------------
+    def packed_get(self, key: tuple) -> Any | None:
+        layout = self._packed.get(key)
+        if layout is not None:
+            self._packed.move_to_end(key)
+        return layout
+
+    def packed_put(self, key: tuple, layout: Any) -> None:
+        self._packed[key] = layout
+        self._packed.move_to_end(key)
+        while len(self._packed) > self.max_packed:
+            self._packed.popitem(last=False)
+
+    # -- campaign warm-start ----------------------------------------------
+    def hint_vl(self, kernel: str, machine: str) -> int | None:
+        """Campaign-derived 'best VL' hint for (kernel, machine), if any."""
+        return self._hints.get(f"{kernel}|{machine}")
+
+    def set_hint(self, kernel: str, machine: str, vl: int) -> None:
+        self._hints[f"{kernel}|{machine}"] = int(vl)
+
+    def warm_from_sweeps(self, store) -> int:
+        """Seed VL hints from campaign cubes (offline warm start).
+
+        ``store`` is a :class:`repro.core.campaign.SweepStore` or a path to
+        a ``BENCH_sweeps.json`` document.  For every (machine, kernel) in
+        every stored campaign, the hint is the vector VL that minimizes
+        modeled cycles at the campaign's most hostile latency corner — the
+        sweep's answer to "how long should the vectors be on this memory
+        system", handed to the serving tuner as its starting point.
+        Returns the number of hints seeded.
+        """
+        from repro.core.campaign import SweepStore
+        from repro.core.vconfig import SCALAR_VL
+
+        if not isinstance(store, SweepStore):
+            # a warm start that silently seeds nothing is worse than an
+            # error: a missing path (typo, campaign never run) and a
+            # future-versioned document both fail loudly
+            if not os.path.exists(str(store)):
+                raise FileNotFoundError(
+                    f"warm_from_sweeps: no campaign store at {store!r} — "
+                    "run a campaign first (python -m benchmarks.run "
+                    "--campaign paper-fig3)")
+            store = SweepStore(str(store), strict=True)
+        seeded = 0
+        for name in store.names():
+            result = store.get(name)
+            s = result.spec
+            vec = [vi for vi, vl in enumerate(s.vls) if vl != SCALAR_VL]
+            if not vec:
+                continue
+            li = int(np.argmax(s.latencies))         # harshest latency corner
+            for mi, m in enumerate(s.machines):
+                for ki, kernel in enumerate(s.kernels):
+                    curve = result.cycles[mi, ki, :, li, 0]
+                    best = min(vec, key=lambda vi: curve[vi])
+                    self.set_hint(kernel, m.name, s.vls[best])
+                    seeded += 1
+        return seeded
+
+    def candidate_vls_for(self, kernel: str, machine: str,
+                          spread: int = 1) -> list[int] | None:
+        """Narrowed candidate-C list around a campaign hint (pow2 spread),
+        or None when no hint exists (caller falls back to the full sweep).
+        The registry feeds this to ``tune_sell_layout(candidates_c=...)``,
+        so a warm-started node measures a handful of pad factors instead of
+        sweeping the full (C, sigma) grid."""
+        hint = self.hint_vl(kernel, machine)
+        if hint is None:
+            return None
+        return sorted({max(8, hint >> k) for k in range(spread + 1)}
+                      | {hint << k for k in range(spread + 1)})
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "hints": len(self._hints),
+            "repacks": sum(self._repacks.values()),
+            "hits": self.hits,
+            "misses": self.misses,
+            "packed": len(self._packed),
+        }

@@ -124,15 +124,23 @@ def test_spmv_sell_cage10_matches_csr():
     np.testing.assert_allclose(got, m.matvec(x), rtol=1e-10, atol=1e-10)
 
 
-def test_spmv_repacks_on_vl_mismatch_instead_of_raising():
+def test_spmv_repacks_on_vl_mismatch_and_records_it():
+    """A C/vl mismatch repacks (correct result, no warning spam) and records
+    the event + layout in the TuneCache; see test_service.py for the
+    no-second-repack regression."""
+    from repro.service.tunecache import TuneCache
+
     m = F.random_csr(100, 100, 5.0, seed=0)
     ell = F.csr_to_ellpack(m, c=32)
     x = RNG.standard_normal(100)
+    cache = TuneCache()
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
-        got = np.asarray(ops.spmv(ell, x, vl=64))
-    assert any("repack" in str(w.message) for w in caught)
+        got = np.asarray(ops.spmv(ell, x, vl=64, cache=cache))
+    assert not any("repack" in str(w.message) for w in caught)
     np.testing.assert_allclose(got, m.matvec(x), rtol=1e-10, atol=1e-10)
+    assert sum(cache.repacks.values()) == 1
+    assert cache.stats["packed"] == 1              # the slabs were kept
 
 
 def test_bucketed_sell_pads_less_than_ellpack_on_skew():

@@ -1,0 +1,524 @@
+"""Serving-subsystem tests: TuneCache, KernelRegistry, KernelService.
+
+The load-bearing guarantees: (1) registering an operand whose signature the
+persistent TuneCache has seen performs ZERO pad-factor measurements (the
+pay-once tune contract, counted by monkeypatching
+``repro.core.autotune.measured_pad_factor``); (2) the LM batcher and the
+kernel service run the same admission loop (one batching core); (3) every
+kernel served through the engine matches its host reference; (4) the
+``ops.spmv`` repack-on-mismatch path reuses the recorded layout instead of
+repacking twice; (5) schema-version mismatches in the cache raise a clear
+error, never a KeyError.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import repro.core.autotune as autotune
+from repro.core.jsonstore import SchemaVersionError
+from repro.graphs import gen as G
+from repro.kernels import ops
+from repro.serve.batcher import Batcher
+from repro.serve.slots import SlotLoop
+from repro.service import (
+    KernelRegistry,
+    KernelService,
+    TuneCache,
+    operand_signature,
+)
+from repro.service.tunecache import SCHEMA_VERSION
+from repro.sparse import formats as F
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture
+def count_measures(monkeypatch):
+    """Counter of measured_pad_factor calls (the expensive tune step)."""
+    calls = {"n": 0}
+    real = autotune.measured_pad_factor
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(autotune, "measured_pad_factor", counting)
+    return calls
+
+
+@pytest.fixture
+def small_world():
+    csr = F.random_csr(200, 200, 6.0, seed=0, skew=1.0)
+    graph = G.random_graph(n_nodes=128, avg_degree=5, seed=1)
+    return csr, graph
+
+
+def make_registry(csr, graph, cache=None):
+    reg = KernelRegistry(cache=cache)
+    reg.register_matrix("mat", csr)
+    reg.register_graph("graph", graph)
+    reg.register_fft("fft", 128)
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# Operand signatures
+# ---------------------------------------------------------------------------
+
+
+def test_signature_is_content_addressed():
+    a = F.random_csr(60, 60, 4.0, seed=3)
+    b = F.random_csr(60, 60, 4.0, seed=3)     # identical content
+    c = F.random_csr(60, 60, 4.0, seed=4)     # same shape, other content
+    assert operand_signature(a) == operand_signature(b)
+    assert operand_signature(a) != operand_signature(c)
+    assert operand_signature(a).key.startswith("csr:60x60:")
+    # format changes the fingerprint kind, graphs are supported too
+    assert operand_signature(F.csr_to_ellpack(a, c=16)).kind == "ellpack"
+    g = G.random_graph(n_nodes=32, avg_degree=3, seed=0)
+    assert operand_signature(g).kind == "graph"
+    with pytest.raises(TypeError, match="unsupported operand"):
+        operand_signature(np.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# TuneCache: persistence, warm hits, schema gate
+# ---------------------------------------------------------------------------
+
+
+def test_tunecache_roundtrip_and_zero_measures_on_hit(
+        tmp_path, small_world, count_measures):
+    csr, _ = small_world
+    path = str(tmp_path / "tune.json")
+
+    cold = TuneCache(path)
+    reg = KernelRegistry(cache=cold)
+    op1 = reg.register_matrix("m", csr)
+    assert not op1.tune_was_cached
+    cold_measures = count_measures["n"]
+    assert cold_measures > 0
+    cold.save()
+
+    # fresh process simulation: reload from disk, re-register same content
+    count_measures["n"] = 0
+    warm = TuneCache(path)
+    assert len(warm) == 1
+    reg2 = KernelRegistry(cache=warm)
+    op2 = reg2.register_matrix("same-content-other-name", csr)
+    assert count_measures["n"] == 0            # the acceptance criterion
+    assert op2.tune_was_cached
+    assert (op2.tuned.c, op2.tuned.sigma, op2.tuned.w_block) == \
+           (op1.tuned.c, op1.tuned.sigma, op1.tuned.w_block)
+    assert op2.tuned.table == op1.tuned.table  # full table round-trips
+
+
+def test_tunecache_same_process_second_registration_is_free(
+        small_world, count_measures):
+    csr, _ = small_world
+    reg = KernelRegistry(cache=TuneCache())    # in-memory cache
+    reg.register_matrix("a", csr)
+    count_measures["n"] = 0
+    op = reg.register_matrix("b", csr)         # same signature, new name
+    assert count_measures["n"] == 0 and op.tune_was_cached
+    # packed slabs were memoized as well: both names share the layout object
+    assert reg.get("a").slabs is reg.get("b").slabs
+
+
+def test_tunecache_future_schema_version_raises_clearly(tmp_path):
+    path = tmp_path / "tune.json"
+    path.write_text(json.dumps(
+        {"schema_version": SCHEMA_VERSION + 1, "entries": {"ghost": {}}}))
+    with pytest.raises(SchemaVersionError, match=(
+            f"schema_version {SCHEMA_VERSION + 1}.*supports {SCHEMA_VERSION}"
+            ".*newer version")):
+        TuneCache(str(path))
+    # non-strict mode degrades to the SweepStore behavior: warn + fresh
+    with pytest.warns(RuntimeWarning, match="ignoring the stale store"):
+        cache = TuneCache(str(path), strict=False)
+    assert len(cache) == 0
+
+
+def test_tunecache_save_requires_path():
+    with pytest.raises(ValueError, match="without a path"):
+        TuneCache().save()
+
+
+def test_tunecache_key_distinguishes_machines(small_world, count_measures):
+    """The same operand tuned for two machines must occupy two cache
+    entries — a hit may never return a layout scored for another machine."""
+    from repro.core.campaign import hbm_like_machine, sve_like_machine
+
+    csr, _ = small_world
+    cache = TuneCache()
+    reg_a = KernelRegistry(cache=cache, machine=hbm_like_machine())
+    reg_b = KernelRegistry(cache=cache, machine=sve_like_machine())
+    op_a = reg_a.register_matrix("m", csr)
+    count_measures["n"] = 0
+    op_b = reg_b.register_matrix("m", csr)
+    assert count_measures["n"] > 0             # different machine re-tunes
+    assert not op_b.tune_was_cached
+    assert len(cache) == 2
+    # the tuner honors the ISA cap: an sve-like machine never gets C > 8
+    assert op_b.tuned.c <= sve_like_machine().max_vl
+    assert op_a.tuned.c >= op_b.tuned.c
+
+
+def test_packed_memo_is_lru_bounded():
+    cache = TuneCache(max_packed=2)
+    cache.packed_put(("a",), 1)
+    cache.packed_put(("b",), 2)
+    assert cache.packed_get(("a",)) == 1       # refresh "a"
+    cache.packed_put(("c",), 3)                # evicts "b" (least recent)
+    assert cache.packed_get(("b",)) is None
+    assert cache.packed_get(("a",)) == 1 and cache.packed_get(("c",)) == 3
+    assert cache.stats["packed"] == 2
+
+
+def test_campaign_hints_narrow_the_tune_sweep(
+        tmp_path, small_world, count_measures):
+    """warm_from_sweeps is consumed, not just stored: a hinted registry
+    measures strictly fewer pad factors than the cold full sweep."""
+    from repro.core.campaign import SweepStore, run_campaign
+
+    csr, _ = small_world
+    KernelRegistry(cache=TuneCache()).register_matrix("m", csr)
+    full_sweep = count_measures["n"]
+
+    store = SweepStore(str(tmp_path / "sweeps.json"))
+    store.put(run_campaign("machine-compare"))
+    store.save()
+    cache = TuneCache()
+    cache.warm_from_sweeps(store.path)
+    count_measures["n"] = 0
+    op = KernelRegistry(cache=cache).register_matrix("m", csr)
+    assert 0 < count_measures["n"] < full_sweep
+    # the winner comes from the campaign-narrowed candidate list
+    assert op.tuned.c in cache.candidate_vls_for("spmv", "tpu-v5e")
+
+    # an operand with a FULL-grid entry is never re-measured just because
+    # hints appeared afterwards: the hinted miss falls back to the full key
+    cache_full = TuneCache()
+    KernelRegistry(cache=cache_full).register_matrix("m", csr)  # full sweep
+    cache_full.warm_from_sweeps(store.path)
+    count_measures["n"] = 0
+    op2 = KernelRegistry(cache=cache_full).register_matrix("m2", csr)
+    assert count_measures["n"] == 0 and op2.tune_was_cached
+
+    # and a missing store path fails loudly instead of seeding nothing
+    with pytest.raises(FileNotFoundError, match="no campaign store"):
+        TuneCache().warm_from_sweeps(str(tmp_path / "typo.json"))
+
+
+def test_warm_from_sweeps_seeds_campaign_hints(tmp_path):
+    from repro.core.campaign import SweepStore, run_campaign
+
+    store = SweepStore(str(tmp_path / "sweeps.json"))
+    store.put(run_campaign("machine-compare"))
+    store.save()
+
+    cache = TuneCache()
+    seeded = cache.warm_from_sweeps(store.path)
+    res = store.get("machine-compare")
+    assert seeded == len(res.spec.machines) * len(res.spec.kernels)
+    # the hint is a vector VL from the campaign grid, per (kernel, machine)
+    for m in res.spec.machines:
+        for kernel in res.spec.kernels:
+            hint = cache.hint_vl(kernel, m.name)
+            assert hint in res.spec.vls and hint != 0
+    # hints narrow the candidate list around the campaign's verdict
+    cands = cache.candidate_vls_for("spmv", "hbm-like")
+    assert cache.hint_vl("spmv", "hbm-like") in cands
+    assert cache.candidate_vls_for("spmv", "no-such-machine") is None
+
+
+# ---------------------------------------------------------------------------
+# One batching core
+# ---------------------------------------------------------------------------
+
+
+def test_lm_batcher_and_kernel_service_share_the_slot_loop():
+    assert issubclass(Batcher, SlotLoop)
+    assert issubclass(KernelService, SlotLoop)
+    # the admission loop is inherited, not copy-pasted
+    for method in ("run", "step", "_fill_slots", "_evict_done"):
+        assert method not in Batcher.__dict__
+        assert method not in KernelService.__dict__
+        assert method in SlotLoop.__dict__
+
+
+def test_slot_loop_rejects_zero_slots():
+    with pytest.raises(ValueError, match="n_slots"):
+        KernelService.__mro__[1].__init__(object.__new__(KernelService), 0)
+
+
+# ---------------------------------------------------------------------------
+# KernelService: correctness, coalescing, async API
+# ---------------------------------------------------------------------------
+
+
+def test_service_results_match_references(small_world):
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=4)
+
+    x = RNG.standard_normal(csr.n_cols)
+    sig = RNG.standard_normal((2, 128))
+    r_spmv = svc.submit("spmv", "mat", x)
+    r_bfs = svc.submit("bfs", "graph", source=3)
+    r_pr = svc.submit("pagerank", "graph", iters=4)
+    r_fft = svc.submit("fft", "fft", sig)
+    assert svc.poll(r_spmv) is None            # async: nothing ran yet
+    svc.drain()
+
+    np.testing.assert_allclose(
+        svc.poll(r_spmv), csr.matvec(x), rtol=1e-10, atol=1e-10)
+    np.testing.assert_array_equal(
+        svc.poll(r_bfs), G.bfs_reference(graph, 3))
+    np.testing.assert_allclose(
+        svc.poll(r_pr), G.pagerank_reference(graph, iters=4), rtol=1e-8)
+    re, im = svc.poll(r_fft)
+    want = np.fft.fft(sig, axis=-1)
+    np.testing.assert_allclose(re, want.real, atol=1e-8)
+    np.testing.assert_allclose(im, want.imag, atol=1e-8)
+    assert svc.stats["served"] == 4 and svc.stats["failed"] == 0
+
+
+def test_service_coalesces_fft_requests(small_world, monkeypatch):
+    """Concurrent FFT requests against one plan become ONE kernel call."""
+    from repro.kernels import fft as fft_k
+
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=8)
+    calls = {"n": 0}
+    real = fft_k.fft_stockham
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(fft_k, "fft_stockham", counting)
+    sigs = [RNG.standard_normal((1, 128)) for _ in range(5)]
+    rids = [svc.submit("fft", "fft", s) for s in sigs]
+    svc.drain()
+    assert calls["n"] == 1                     # 5 requests, one launch
+    assert svc.stats["coalesced"] >= 5 and svc.stats["max_group"] == 5
+    for rid, s in zip(rids, sigs):
+        re, _ = svc.poll(rid)
+        np.testing.assert_allclose(re, np.fft.fft(s, axis=-1).real, atol=1e-8)
+
+
+def test_service_more_requests_than_slots_all_complete(small_world):
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=2)
+    xs = [RNG.standard_normal(csr.n_cols) for _ in range(7)]
+    rids = [svc.submit("spmv", "mat", x) for x in xs]
+    done = svc.drain()
+    assert len(done) == 7
+    for rid, x in zip(rids, xs):
+        np.testing.assert_allclose(
+            svc.poll(rid), csr.matvec(x), rtol=1e-10, atol=1e-10)
+
+
+def test_service_errors_travel_to_the_caller(small_world):
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=2)
+    with pytest.raises(ValueError, match="unknown op"):
+        svc.submit("matmul", "mat", None)
+    with pytest.raises(KeyError, match="not registered"):
+        svc.submit("spmv", "nope", None)
+    # one malformed request must not fail its coalesced groupmates: the bad
+    # and good FFT land in the same (op, operand) group in the same round
+    good_sig = RNG.standard_normal((1, 128))
+    bad = svc.submit("fft", "fft", RNG.standard_normal((1, 64)))  # wrong len
+    good = svc.submit("fft", "fft", good_sig)
+    svc.drain()
+    with pytest.raises(RuntimeError, match="signal length 64"):
+        svc.poll(bad)
+    re, _ = svc.poll(good)
+    np.testing.assert_allclose(re, np.fft.fft(good_sig, axis=-1).real,
+                               atol=1e-8)
+    assert svc.stats["failed"] == 1 and svc.stats["served"] >= 1
+
+
+def test_service_bad_request_spares_coalesced_groupmates(small_world):
+    """A malformed payload fails its own request only — the valid request
+    coalesced into the same (op, operand) group still completes."""
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=4)
+    x = RNG.standard_normal(csr.n_cols)
+    bad = svc.submit("spmv", "mat", None)              # malformed payload
+    good = svc.submit("spmv", "mat", x)
+    svc.drain()
+    with pytest.raises(RuntimeError, match="failed"):
+        svc.poll(bad)
+    np.testing.assert_allclose(
+        svc.poll(good), csr.matvec(x), rtol=1e-10, atol=1e-10)
+    assert svc.stats["failed"] == 1 and svc.stats["served"] == 1
+
+
+def test_service_validates_spmv_and_bfs_payloads(small_world):
+    """Wrong-sized x / out-of-range source must error, not return garbage
+    (JAX clamps out-of-bounds gathers, so silent success is the trap)."""
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=4)
+    ok_x = RNG.standard_normal(csr.n_cols)
+    bad_x = svc.submit("spmv", "mat", RNG.standard_normal(csr.n_cols - 7))
+    ok = svc.submit("spmv", "mat", ok_x)
+    bad_src = svc.submit("bfs", "graph", source=graph.n_nodes + 1)
+    svc.drain()
+    with pytest.raises(RuntimeError, match="must have shape"):
+        svc.poll(bad_x)
+    with pytest.raises(RuntimeError, match="out of range"):
+        svc.poll(bad_src)
+    np.testing.assert_allclose(
+        svc.poll(ok), csr.matvec(ok_x), rtol=1e-10, atol=1e-10)
+
+
+def test_service_release_of_done_request_still_in_slot(small_world):
+    """Releasing after execute but before the next eviction round must not
+    let _evict_done resurrect the request into `completed`."""
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=2)
+    rid = svc.submit("spmv", "mat", RNG.standard_normal(csr.n_cols))
+    assert svc.step()                          # admitted + executed
+    assert svc.poll(rid) is not None           # done, but still in its slot
+    svc.release(rid)
+    assert all(s is None for s in svc.slots)
+    assert not svc.step()                      # idle; nothing resurrected
+    assert not svc.completed and svc.stats["served"] == 1
+
+
+def test_service_ragged_fft_payload_spares_groupmates(small_world):
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=4)
+    good_sig = RNG.standard_normal((1, 128))
+    bad = svc.submit("fft", "fft", [[1.0, 2.0], [3.0]])   # ragged list
+    good = svc.submit("fft", "fft", good_sig)
+    svc.drain()
+    with pytest.raises(RuntimeError, match="failed"):
+        svc.poll(bad)
+    re, _ = svc.poll(good)
+    np.testing.assert_allclose(re, np.fft.fft(good_sig, axis=-1).real,
+                               atol=1e-8)
+
+
+def test_service_rejects_complex_fft_payload(small_world):
+    """Casting complex->float64 would silently drop the imaginary plane."""
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=2)
+    rid = svc.submit("fft", "fft",
+                     RNG.standard_normal((1, 128)) * (1 + 1j))
+    svc.drain()
+    with pytest.raises(RuntimeError, match="complex signals"):
+        svc.poll(rid)
+
+
+def test_service_release_drops_delivered_results(small_world):
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=2)
+    rid = svc.submit("spmv", "mat", RNG.standard_normal(csr.n_cols))
+    with pytest.raises(ValueError, match="not finished"):
+        svc.release(rid)                       # refuse: it would leak later
+    svc.drain()
+    assert svc.poll(rid) is not None
+    svc.release(rid)
+    assert not svc.completed and rid not in svc._by_rid
+    with pytest.raises(KeyError):
+        svc.poll(rid)
+    svc.release(rid)                           # idempotent
+
+
+def test_service_rejects_wrong_operand_kind(small_world):
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=2)
+    rid = svc.submit("spmv", "graph", RNG.standard_normal(8))
+    svc.drain()
+    with pytest.raises(RuntimeError, match="not a matrix"):
+        svc.poll(rid)
+
+
+# ---------------------------------------------------------------------------
+# ops.spmv repack regression: the second call must not repack
+# ---------------------------------------------------------------------------
+
+
+def test_spmv_second_mismatched_call_does_not_repack(monkeypatch):
+    csr = F.random_csr(90, 90, 5.0, seed=2)
+    ell = F.csr_to_ellpack(csr, c=16)          # packed at the "wrong" C
+    x = RNG.standard_normal(90)
+    cache = TuneCache()
+
+    packs = {"n": 0}
+    real = ops.csr_to_sell_slabs
+
+    def counting(*args, **kwargs):
+        packs["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "csr_to_sell_slabs", counting)
+    y1 = np.asarray(ops.spmv(ell, x, vl=32, cache=cache))
+    assert packs["n"] == 1                     # first call pays the repack
+    y2 = np.asarray(ops.spmv(ell, x, vl=32, cache=cache))
+    assert packs["n"] == 1                     # second call reuses it
+    np.testing.assert_allclose(y1, csr.matvec(x), rtol=1e-10, atol=1e-10)
+    np.testing.assert_array_equal(y1, y2)
+    assert sum(cache.repacks.values()) == 1    # recorded once, not per call
+
+
+def test_spmv_default_cache_memoizes_across_calls(monkeypatch):
+    """Without an explicit cache the process-wide default still dedupes."""
+    monkeypatch.setattr(ops, "_DEFAULT_CACHE", None)   # isolate the test
+    csr = F.random_csr(70, 70, 4.0, seed=5)
+    ell = F.csr_to_ellpack(csr, c=8)
+    x = RNG.standard_normal(70)
+    packs = {"n": 0}
+    real = ops.csr_to_sell_slabs
+
+    def counting(*args, **kwargs):
+        packs["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "csr_to_sell_slabs", counting)
+    ops.spmv(ell, x, vl=16)
+    ops.spmv(ell, x, vl=16)
+    assert packs["n"] == 1
+    assert sum(ops.default_tune_cache().repacks.values()) == 1
+
+
+# ---------------------------------------------------------------------------
+# pack_tuned with a cache
+# ---------------------------------------------------------------------------
+
+
+def test_pack_tuned_consults_cache(small_world, count_measures):
+    csr, _ = small_world
+    cache = TuneCache()
+    slabs1, tuned1 = ops.pack_tuned(csr, cache=cache)
+    assert count_measures["n"] > 0
+    count_measures["n"] = 0
+    slabs2, tuned2 = ops.pack_tuned(csr, cache=cache)
+    assert count_measures["n"] == 0
+    assert slabs2 is slabs1                    # packed memo hit
+    assert (tuned2.c, tuned2.sigma) == (tuned1.c, tuned1.sigma)
+    x = RNG.standard_normal(csr.n_cols)
+    np.testing.assert_allclose(
+        np.asarray(ops.spmv(slabs2, x, vl=tuned2.c, w_block=tuned2.w_block)),
+        csr.matvec(x), rtol=1e-10, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# bench_service smoke (tiny): the CI artifact shape
+# ---------------------------------------------------------------------------
+
+
+def test_bench_service_emits_load_levels_and_tune_rows():
+    bench_service = pytest.importorskip(
+        "benchmarks.bench_service",
+        reason="benchmarks namespace package needs the repo root on sys.path")
+    table = bench_service.bench_load(loads=(2, 4, 6), n_slots=4,
+                                     with_bfs=False)
+    assert sorted(table) == [
+        "service_load_2", "service_load_4", "service_load_6"]
+    for entry in table.values():
+        assert entry["served"] == entry["offered"]
+        assert entry["us_per_call"] > 0 and entry["throughput_rps"] > 0
