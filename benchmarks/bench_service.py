@@ -9,14 +9,16 @@ then
   (zero measurements) — the pay-once contract of the serving subsystem as a
   number;
 * drives the :class:`KernelService` at several offered-load levels (mixed
-  SpMV / FFT / PageRank / BFS request batches) and reports throughput and
-  mean per-request latency at each level.
+  spmv-heavy SpMV / FFT / PageRank / BFS request batches, every coalesced
+  group collapsing into one batched core launch) and reports throughput,
+  p50/p95/p99 request latency, launch counts and the backpressure counter
+  (queue-full rejections under the bounded admission queue) at each level.
 
-Results go to ``BENCH_service.json`` (name -> metrics, ``us_per_call``
-tracked by ``scripts/bench_compare.py`` in the CI ``service-smoke`` job).
-Interpret-mode wall times are NOT a hardware performance statement — the
-table exists so the serving path provably runs end-to-end and its trends are
-diffable across PRs.
+Results go to ``BENCH_service.json`` (name -> metrics; ``us_per_call`` and
+the latency percentiles tracked by ``scripts/bench_compare.py`` in the CI
+``service-smoke`` job).  Interpret-mode wall times are NOT a hardware
+performance statement — the table exists so the serving path provably runs
+end-to-end and its trends are diffable across PRs.
 """
 from __future__ import annotations
 
@@ -105,35 +107,56 @@ def bench_tune(cache_path: str) -> dict:
     }
 
 
+def _submit(svc, *args, **kwargs) -> int:
+    """Submit with backpressure: on a queue-full rejection, advance the
+    scheduler one step and retry — the shed-or-wait loop a fronting load
+    balancer runs, with the rejection counted in ``stats['rejected']``."""
+    from repro.service import QueueFull
+
+    while True:
+        try:
+            return svc.submit(*args, **kwargs)
+        except QueueFull:
+            svc.step()
+
+
 def _mixed_batch(rng, svc, csr, n_fft: int, load: int,
                  with_bfs: bool) -> list[int]:
     """Submit ``load`` mixed requests; returns their rids.
 
     Mix per 8 requests: 4 SpMV, 2 FFT, 1 PageRank, 1 BFS (BFS optional —
     interpret-mode BFS is the slow one, CI keeps a couple for coverage).
+    SpMV-heavy by construction: every scheduling round coalesces an SpMV
+    group that the batched core runs as one multi-RHS launch.
     """
     rids = []
     for i in range(load):
         kind = i % 8
         if kind < 4:
-            rids.append(svc.submit(
-                "spmv", "mat", rng.standard_normal(csr.n_cols)))
+            rids.append(_submit(
+                svc, "spmv", "mat", rng.standard_normal(csr.n_cols)))
         elif kind < 6:
-            rids.append(svc.submit(
-                "fft", "fft", rng.standard_normal((1, n_fft))))
+            rids.append(_submit(
+                svc, "fft", "fft", rng.standard_normal((1, n_fft))))
         elif kind == 6:
-            rids.append(svc.submit("pagerank", "graph", iters=2))
+            rids.append(_submit(svc, "pagerank", "graph", iters=2))
         elif with_bfs:
-            rids.append(svc.submit("bfs", "graph", source=int(rng.integers(0, 64))))
+            rids.append(_submit(svc, "bfs", "graph",
+                                source=int(rng.integers(0, 64))))
         else:
-            rids.append(svc.submit(
-                "spmv", "mat", rng.standard_normal(csr.n_cols)))
+            rids.append(_submit(
+                svc, "spmv", "mat", rng.standard_normal(csr.n_cols)))
     return rids
 
 
-def bench_load(loads=(8, 32, 100), n_slots: int = 8,
-               with_bfs: bool = True) -> dict:
-    """Throughput vs offered load through one shared registry."""
+def bench_load(loads=(8, 32, 100), n_slots: int = 32,
+               with_bfs: bool = True, max_queue: int = 64) -> dict:
+    """Throughput vs offered load through one shared registry.
+
+    ``n_slots`` is the coalescing window: with the batched SELL core a
+    wider window turns directly into wider RHS stacks (bigger k per
+    launch), which is where the multi-RHS throughput comes from.
+    """
     from repro.service import KernelRegistry, KernelService, TuneCache
 
     csr, graph = _build_operands()
@@ -145,14 +168,17 @@ def bench_load(loads=(8, 32, 100), n_slots: int = 8,
 
     rng = np.random.default_rng(0)
     table = {}
-    # warm-up: compile every kernel shape once so load levels compare
-    # scheduling, not compilation
-    warm = KernelService(reg, n_slots=n_slots)
-    _mixed_batch(rng, warm, csr, n_fft, 8, with_bfs)
-    warm.drain()
+    # warm-up: compile every batch shape the load ladder will hit (full
+    # window, the partial trailing round, and the 1-wide uncoalesced
+    # counterfactual) so load levels compare scheduling, not compilation
+    for warm_load, warm_slots in ((min(n_slots, 32), n_slots),
+                                  (8, n_slots), (4, n_slots), (8, 1)):
+        warm = KernelService(reg, n_slots=warm_slots)
+        _mixed_batch(rng, warm, csr, n_fft, warm_load, with_bfs)
+        warm.drain()
 
-    for load in loads:
-        svc = KernelService(reg, n_slots=n_slots)
+    def run_level(load: int, slots: int) -> dict:
+        svc = KernelService(reg, n_slots=slots, max_queue=max_queue)
         rng_l = np.random.default_rng(load)
         t0 = time.perf_counter()
         rids = _mixed_batch(rng_l, svc, csr, n_fft, load, with_bfs)
@@ -160,16 +186,34 @@ def bench_load(loads=(8, 32, 100), n_slots: int = 8,
         wall = time.perf_counter() - t0
         assert len(done) == load and all(
             svc.poll(rid) is not None for rid in rids)
-        table[f"service_load_{load}"] = {
+        entry = {
             "us_per_call": round(wall / load * 1e6, 1),
             "throughput_rps": round(load / wall, 1),
             "offered": load,
             "served": svc.stats["served"],
+            "rejected": svc.stats["rejected"],
             "steps": svc.stats["steps"],
             "groups": svc.stats["groups"],
             "coalesced": svc.stats["coalesced"],
             "max_group": svc.stats["max_group"],
+            "launches": svc.stats["launches"],
         }
+        entry.update(svc.latency_percentiles())
+        return entry
+
+    for load in loads:
+        table[f"service_load_{load}"] = run_level(load, n_slots)
+
+    # the multi-RHS headline, measured against its own counterfactual on
+    # the same machine state: the top load level re-served with a 1-wide
+    # window (every request its own group = one launch per request, the
+    # pre-batching engine).  The speedup is what group coalescing into the
+    # batched core buys, independent of how fast this runner is today.
+    top = max(loads)
+    solo = run_level(top, 1)
+    table[f"service_load_{top}_uncoalesced"] = solo
+    table[f"service_load_{top}"]["coalescing_speedup"] = round(
+        solo["us_per_call"] / table[f"service_load_{top}"]["us_per_call"], 2)
     return table
 
 

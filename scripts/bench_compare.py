@@ -6,12 +6,16 @@
 
 Prints a readable per-benchmark delta table and exits 1 when any tracked
 metric regressed beyond tolerance or a baselined benchmark disappeared.
-Tracked metrics: ``pad_factor`` (deterministic layout quality — gated at
-``--tolerance``) and ``us_per_call`` (interpret-mode wall time — gated at
+Tracked metrics: ``pad_factor`` and ``rejected`` (deterministic layout
+quality / scheduler backpressure counts — gated at ``--tolerance``) and the
+wall-time family ``us_per_call`` / ``p50_us`` / ``p95_us`` / ``p99_us``
+(interpret-mode wall times and request-latency percentiles — gated at
 ``--time-tolerance``, which defaults to ``--tolerance`` but usually needs
-more headroom on shared CI runners).  Both metrics are higher-is-worse, so
+more headroom on shared CI runners).  All metrics are higher-is-worse, so
 only increases beyond tolerance fail; a large *improvement* is flagged
 ``IMPROVED`` (non-fatal) as a nudge to re-baseline so the win is locked in.
+A metric present in the baseline but missing from the current run fails
+(a field that silently vanishes is a regression in the artifact schema).
 
 To re-baseline after an intentional change, regenerate and commit::
 
@@ -24,7 +28,9 @@ import argparse
 import json
 import sys
 
-METRICS = ("us_per_call", "pad_factor")
+#: wall-time metrics gated at --time-tolerance; the rest at --tolerance
+TIME_METRICS = ("us_per_call", "p50_us", "p95_us", "p99_us")
+METRICS = TIME_METRICS + ("pad_factor", "rejected")
 
 
 def load(path: str) -> dict:
@@ -40,7 +46,8 @@ def compare(baseline: dict, current: dict, tolerance: float,
     """Rows of (name, metric, base, cur, delta_frac, status); ok flag."""
     rows = []
     ok = True
-    tol = {"us_per_call": time_tolerance, "pad_factor": tolerance}
+    tol = {m: (time_tolerance if m in TIME_METRICS else tolerance)
+           for m in METRICS}
     for name in sorted(set(baseline) | set(current)):
         if name not in current:
             rows.append((name, "-", "-", "-", None, "GONE"))
@@ -54,7 +61,12 @@ def compare(baseline: dict, current: dict, tolerance: float,
                 continue
             base = float(baseline[name][metric])
             cur = float(current[name].get(metric, float("nan")))
-            delta = (cur - base) / base if base else float("inf")
+            # zero-based counters (e.g. `rejected`) have no relative scale:
+            # any appearance is a regression, staying at zero is OK
+            if base:
+                delta = (cur - base) / base
+            else:
+                delta = 0.0 if cur == 0 else float("inf")
             # higher-is-worse metrics: gate increases only; big decreases
             # are improvements worth re-baselining, not build failures
             if delta > tol[metric] or delta != delta:    # regression or NaN

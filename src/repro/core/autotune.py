@@ -102,6 +102,9 @@ class SellTuneResult:
     pad_factor: float
     #: (c, sigma, measured pad_factor, modeled cycles) per candidate
     table: tuple[tuple[int, int, float, float], ...]
+    #: RHS tile of the batched SpMM core (multi-RHS requests per grid cell);
+    #: defaulted for tune entries persisted before the k axis existed
+    k_block: int = 8
 
     def speedup_over_worst(self) -> float:
         worst = max(cy for *_, cy in self.table)
@@ -140,6 +143,8 @@ def pick_w_block(
     multiple: int = SUBLANE,
 ) -> int:
     """Largest sublane-aligned W tile whose double-buffered slab fits VMEM."""
+    from repro.sparse.formats import pow2_ceil
+
     w = multiple
     while (
         w * 2 <= max_width
@@ -148,8 +153,36 @@ def pick_w_block(
         w *= 2
     # Never exceed the padded slab width, but stay a power of two so the
     # (w_block, C) tiles keep their sublane alignment.
-    pow2_cap = 1 << max(int(max_width) - 1, 0).bit_length()
-    return max(1, min(w, pow2_cap))
+    return max(1, min(w, pow2_ceil(max_width)))
+
+
+def pick_k_block(
+    c: int,
+    n_cols: int,
+    vmem_budget: float = VMEM_BUDGET_BYTES,
+    k_max: int = 32,
+    w_block: int = SUBLANE,
+) -> int:
+    """Largest power-of-two RHS tile whose resident state fits the budget.
+
+    The k axis of the batched SpMM core amortizes the slab traffic across
+    right-hand sides, so wider is strictly better until the VMEM-resident
+    X block (8 B * n_cols per column), the (C, k) output tile, and the
+    double-buffered slab tile stop fitting together — the co-tune is the
+    greedy fill, capped at ``k_max`` (beyond the cap the amortization has
+    flattened and compile-time variants multiply for no win).  Pass the
+    co-selected ``w_block`` so the slab tile term prices the tile that
+    will actually run, keeping the (w_block, k_block) pair JOINTLY inside
+    the budget rather than each fitting alone.
+    """
+    slab_tile = 2 * w_block * c * 12.0        # double-buffered cols+vals
+    k = 1
+    while (
+        k * 2 <= k_max
+        and 8.0 * (n_cols + c) * (k * 2) + slab_tile <= vmem_budget
+    ):
+        k *= 2
+    return k
 
 
 def tune_sell_layout(
@@ -215,18 +248,24 @@ def tune_sell_layout(
         raise ValueError("no (C, sigma) candidate fits the VMEM budget")
     best = min(rows, key=lambda r: r[3])
     max_w = int(lengths.max()) if n_rows else 1
+    # The tile budget is whatever the x-resident vector leaves over, so the
+    # returned triple is consistent with the candidate filter above; the
+    # RHS tile is then priced against the slab tile w_block actually
+    # claims, so (w_block, k_block) fit the budget together, not just
+    # each on its own.
+    w_block = pick_w_block(
+        best[0], max(max_w, 1),
+        vmem_budget=max(vmem_budget - x_resident, 2 * SUBLANE * best[0] * 12.0),
+    )
     result = SellTuneResult(
         c=best[0],
         sigma=best[1],
-        # The tile budget is whatever the x-resident vector leaves over, so
-        # the returned triple is consistent with the candidate filter above.
-        w_block=pick_w_block(
-            best[0], max(max_w, 1),
-            vmem_budget=max(vmem_budget - x_resident, 2 * SUBLANE * best[0] * 12.0),
-        ),
+        w_block=w_block,
         cycles=best[3],
         pad_factor=best[2],
         table=tuple(rows),
+        k_block=pick_k_block(best[0], n_cols, vmem_budget=vmem_budget,
+                             w_block=w_block),
     )
     if cache is not None and cache_key is not None:
         cache.put_sell(cache_key, result)

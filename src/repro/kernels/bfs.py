@@ -8,8 +8,16 @@ the long-vector formulation of frontier expansion (the paper's top-down
 variant needs vector scatter; bottom-up keeps the same traffic class with
 TPU-friendly semantics).
 
+The SELL variants are thin drivers over the batched execution core
+(:mod:`repro.kernels.sell_core`): the frontier state is a stacked
+(n + 1, k) column matrix — one column per BFS source — and only the
+combine op (``any neighbor on the previous level``) lives here.  The
+per-bucket launch + scatter loop is :func:`sell_core.bucketed_node_step`,
+shared with PageRank.
+
 Grid: (n_nodes / vl,).  The dist array stays VMEM-resident (2^15 nodes =
-128 KiB of i32), adjacency streams through.
+128 KiB of i32), adjacency streams through.  Node counts that do not divide
+``vl`` are padded internally (and the pad trimmed from the result).
 """
 from __future__ import annotations
 
@@ -19,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.kernels import sell_core
 
 PAD = -1
 INF = np.iinfo(np.int32).max
@@ -48,12 +58,18 @@ def bfs_step(
     """One bottom-up BFS level over ELLPACK adjacency (n, width).
 
     ``level`` is a (1,) int32 array; returns the updated (n,) distances.
+    ``n`` need not divide ``vl``: the node block is padded with PAD rows
+    (distance INF, never hit) and the pad is trimmed from the result.
     """
     n, width = adj.shape
-    assert n % vl == 0, "pad the node count to a multiple of vl"
-    grid = (n // vl,)
+    if n % vl:
+        pad = vl - n % vl
+        adj = jnp.pad(adj, ((0, pad), (0, 0)), constant_values=PAD)
+        dist = jnp.pad(dist, (0, pad), constant_values=INF)
+    n_pad = adj.shape[0]
+    grid = (n_pad // vl,)
     kernel = functools.partial(_bfs_step_kernel, vl=vl)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -62,18 +78,27 @@ def bfs_step(
             pl.BlockSpec(level.shape, lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((vl,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), dist.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), dist.dtype),
         interpret=interpret,
     )(adj, dist, level)
+    return out[:n]
 
 
 def _bfs_sell_step_kernel(adj_ref, nodes_ref, dist_ref, level_ref, out_ref):
+    """The BFS combine op: any in-neighbor on the previous level.
+
+    Rank-polymorphic over the frontier state: (n + 1,) distances keep the
+    single-source fast path, (n + 1, k) advances k stacked sources (one
+    RHS column each) through the same launch.
+    """
     level = level_ref[0]
     adj = adj_ref[0]                          # (C, W_b)
     nodes = nodes_ref[0]                      # (C,) original ids, n for pads
     mask = adj != PAD
     safe = jnp.where(mask, adj, 0)
-    nd = dist_ref[safe]
+    nd = dist_ref[safe]                       # (C, W_b) or (C, W_b, k)
+    if nd.ndim == 3:
+        mask = mask[..., None]
     hit = jnp.any(jnp.where(mask, nd == level - 1, False), axis=1)
     mine = dist_ref[nodes]                    # gather through the sigma-sort
     out_ref[0] = jnp.where((mine == INF) & hit, level, mine)
@@ -90,41 +115,42 @@ def bfs_step_sell(
 ) -> jnp.ndarray:
     """One bottom-up level over width-bucketed, degree-sorted adjacency.
 
-    ``bucket_adj[b]``: (n_slices_b, C, W_b) in-neighbor slabs of the
-    sigma-sorted node order; ``bucket_nodes[b]``: (n_slices_b, C) original
-    node ids (``n`` = dump slot for padding lanes).  ``dist`` has length
-    n + 1 (the dump slot stays INF); returns the updated copy.
+    ``dist`` is (n + 1,) for a single source or (n + 1, k) for k stacked
+    sources (the dump slot stays INF); returns the updated copy with the
+    same shape.  One launch set advances every column.
     """
-    for adj, nodes in zip(bucket_adj, bucket_nodes):
-        s, c, w = adj.shape
-        out = pl.pallas_call(
-            _bfs_sell_step_kernel,
-            grid=(s,),
-            in_specs=[
-                pl.BlockSpec((1, c, w), lambda i: (i, 0, 0)),
-                pl.BlockSpec((1, c), lambda i: (i, 0)),
-                pl.BlockSpec(dist.shape, lambda i: (0,)),       # resident
-                pl.BlockSpec(level.shape, lambda i: (0,)),
-            ],
-            out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
-            out_shape=jax.ShapeDtypeStruct((s, c), dist.dtype),
-            interpret=interpret,
-        )(adj, nodes, dist, level)
-        dist = dist.at[nodes.reshape(-1)].set(out.reshape(-1))
-    return dist.at[-1].set(INF)               # keep the dump slot inert
+    out = sell_core.bucketed_node_step(
+        _bfs_sell_step_kernel, bucket_adj, bucket_nodes,
+        (dist, level), dist, interpret=interpret,
+    )
+    return out.at[-1].set(INF)                # keep the dump slot inert
 
 
 def bfs_sell(
     bucket_adj: tuple[jnp.ndarray, ...],
     bucket_nodes: tuple[jnp.ndarray, ...],
     n_nodes: int,
-    source: int,
+    source,
     *,
     max_levels: int | None = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Full BFS over bucketed SELL adjacency; returns (n_nodes,) distances."""
-    dist = jnp.full((n_nodes + 1,), INF, jnp.int32).at[source].set(0)
+    """Full BFS over bucketed SELL adjacency, batched over sources.
+
+    ``source`` may be one node id or a sequence of k ids: the frontiers
+    become RHS columns and every level is one launch set for the whole
+    batch.  Returns (n_nodes,) distances for a scalar source, (n_nodes, k)
+    — one column per source — for a sequence.  Columns that converge early
+    stay fixed while the rest keep expanding.
+    """
+    scalar = np.ndim(source) == 0
+    sources = np.atleast_1d(np.asarray(source, np.int64))
+    k = len(sources)
+    if scalar:                                # single-column fast path
+        dist = jnp.full((n_nodes + 1,), INF, jnp.int32).at[int(source)].set(0)
+    else:
+        dist = jnp.full((n_nodes + 1, k), INF, jnp.int32)
+        dist = dist.at[jnp.asarray(sources), jnp.arange(k)].set(0)
     max_levels = max_levels or n_nodes
     for level in range(1, max_levels + 1):
         new = bfs_step_sell(
@@ -151,11 +177,15 @@ def bfs(
     as the FPGA driver does) or ``max_levels`` is hit.
     """
     n = adj.shape[0]
-    dist = jnp.full((n,), INF, jnp.int32).at[source].set(0)
+    # pad once here, not once per level inside bfs_step (which would copy
+    # the whole adjacency every iteration of the fixed point)
+    if n % vl:
+        adj = jnp.pad(adj, ((0, vl - n % vl), (0, 0)), constant_values=PAD)
+    dist = jnp.full((adj.shape[0],), INF, jnp.int32).at[source].set(0)
     max_levels = max_levels or n
     for level in range(1, max_levels + 1):
         new = bfs_step(adj, dist, jnp.array([level], jnp.int32), vl=vl, interpret=interpret)
         if bool(jnp.all(new == dist)):
             break
         dist = new
-    return dist
+    return dist[:n]

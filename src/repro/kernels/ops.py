@@ -19,7 +19,7 @@ from repro.graphs.gen import EllpackGraph, graph_to_sell_slabs
 from repro.kernels import bfs as bfs_k
 from repro.kernels import fft as fft_k
 from repro.kernels import pagerank as pr_k
-from repro.kernels import sell as sell_k
+from repro.kernels import sell_core
 from repro.kernels import spmv as spmv_k
 from repro.kernels.ref import fft_twiddles
 from repro.sparse.formats import (
@@ -96,16 +96,69 @@ def _repack_cached(matrix, vl: int, sigma: int | None, cache) -> SellSlabs:
     return slabs
 
 
-def _spmv_slabs(slabs: SellSlabs, x, *, w_block: int, interpret: bool) -> jnp.ndarray:
-    return sell_k.spmv_sell(
+def _spmm_slabs(
+    slabs: SellSlabs, x, *, w_block: int, k_block: int, interpret: bool
+) -> jnp.ndarray:
+    return sell_core.spmm_sell(
         tuple(jnp.asarray(c) for c in slabs.bucket_cols),
         tuple(jnp.asarray(v) for v in slabs.bucket_vals),
         tuple(jnp.asarray(r) for r in slabs.bucket_rows),
         jnp.asarray(x),
         n_rows=slabs.n_rows,
         w_block=w_block,
+        k_block=k_block,
         interpret=interpret,
     )
+
+
+def spmm(
+    matrix: CSRMatrix | EllpackMatrix | SellCSigmaMatrix | SellSlabs,
+    x: np.ndarray | jnp.ndarray,
+    *,
+    vl: int = 256,
+    sigma: int | None = None,
+    w_block: int = 8,
+    k_block: int | None = None,
+    interpret: bool | None = None,
+    cache=None,
+) -> jnp.ndarray:
+    """Y = A @ X for stacked right-hand sides X of shape (n_cols, k).
+
+    The batched core of :func:`spmv`: every supported format is normalized
+    to width-bucketed SELL slabs and the whole RHS stack runs as one
+    launch set through :func:`repro.kernels.sell_core.spmm_sell`.
+    ``k_block`` (default: the power of two covering k, capped at 8 — pass
+    the co-tuned :attr:`SellTuneResult.k_block` for the VMEM-fitted value)
+    tiles the RHS axis.  Returns Y of shape (n_rows, k).
+    """
+    x = jnp.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"spmm expects X of shape (n_cols, k), got {x.shape}")
+    if k_block is None:
+        k_block = min(8, sell_core.pow2_ceil(x.shape[1]))
+    interpret = default_interpret() if interpret is None else interpret
+    if not isinstance(matrix, CSRMatrix) and matrix.c != vl:
+        matrix = _repack_cached(matrix, vl, sigma, cache)
+    if isinstance(matrix, CSRMatrix):
+        matrix = csr_to_sell_slabs(matrix, c=vl, sigma=sigma)
+    if isinstance(matrix, SellCSigmaMatrix):
+        matrix = sell_to_slabs(matrix)
+    if isinstance(matrix, SellSlabs):
+        return _spmm_slabs(
+            matrix, x, w_block=w_block, k_block=k_block, interpret=interpret
+        )
+    # uniform-width ELLPACK: run the stack column-by-column through the
+    # paper-baseline kernel (the SELL slab path above is the batched one)
+    cols = jnp.asarray(matrix.cols)
+    vals = jnp.asarray(matrix.vals)
+    ys = [
+        spmv_k.spmv_ell(
+            cols, vals, x[:, i],
+            w_block=min(w_block, matrix.width), interpret=interpret,
+        )[: matrix.n_rows]
+        for i in range(x.shape[1])
+    ]
+    return jnp.stack(ys, axis=1)
 
 
 def spmv(
@@ -125,11 +178,20 @@ def spmv(
     * :class:`SellSlabs` / :class:`SellCSigmaMatrix` — bucketed kernel;
     * :class:`EllpackMatrix` — the uniform-width kernel.
 
+    ``x`` may be a single (n_cols,) vector or a stacked (n_cols, k) RHS
+    matrix; the latter dispatches to :func:`spmm` and returns (n_rows, k).
+
     A pre-packed matrix whose C disagrees with ``vl`` is repacked once and
     the layout is memoized in the TuneCache (``cache``, defaulting to the
     process-wide :func:`default_tune_cache`): repeated calls with the same
     operand reuse the repacked slabs instead of discarding the work.
     """
+    x = jnp.asarray(x)
+    if x.ndim == 2:
+        return spmm(
+            matrix, x, vl=vl, sigma=sigma, w_block=w_block,
+            interpret=interpret, cache=cache,
+        )
     interpret = default_interpret() if interpret is None else interpret
     if not isinstance(matrix, CSRMatrix) and matrix.c != vl:
         matrix = _repack_cached(matrix, vl, sigma, cache)
@@ -138,11 +200,14 @@ def spmv(
     if isinstance(matrix, SellCSigmaMatrix):
         matrix = sell_to_slabs(matrix)
     if isinstance(matrix, SellSlabs):
-        return _spmv_slabs(matrix, x, w_block=w_block, interpret=interpret)
+        return _spmm_slabs(
+            matrix, x[:, None], w_block=w_block, k_block=1,
+            interpret=interpret,
+        )[:, 0]
     y = spmv_k.spmv_ell(
         jnp.asarray(matrix.cols),
         jnp.asarray(matrix.vals),
-        jnp.asarray(x),
+        x,
         w_block=min(w_block, matrix.width),
         interpret=interpret,
     )
@@ -274,16 +339,9 @@ def fft(
 # ---------------------------------------------------------------------------
 
 
-def _pad_graph(adj: np.ndarray, vl: int) -> np.ndarray:
-    n = adj.shape[0]
-    if n % vl:
-        adj = np.pad(adj, ((0, vl - n % vl), (0, 0)), constant_values=PAD)
-    return adj
-
-
 def bfs(
     graph: EllpackGraph,
-    source: int = 0,
+    source=0,
     *,
     vl: int = 256,
     sigma: int | None = None,
@@ -295,6 +353,11 @@ def bfs(
     ``layout="sell"`` runs the width-bucketed kernel over in-degree-sorted
     adjacency slabs: skewed-degree graphs stop paying the global max
     in-degree per node.
+
+    ``source`` may be one node id or a sequence of k ids.  A sequence
+    returns stacked (n_nodes, k) distances, one column per source; on the
+    SELL layout the whole stack advances through one launch set per level
+    (the multi-RHS batched core), on ELLPACK the sources run one by one.
     """
     if layout not in ("ell", "sell"):
         raise ValueError(f"unknown layout {layout!r}: expected 'ell' or 'sell'")
@@ -311,9 +374,13 @@ def bfs(
             n, source, interpret=interpret,
         )
         return np.asarray(dist)
-    radj = _pad_graph(rgraph.adj, vl)
-    dist = bfs_k.bfs(jnp.asarray(radj), source, vl=vl, interpret=interpret)
-    return np.asarray(dist[:n])
+    radj = jnp.asarray(rgraph.adj)            # bfs_step auto-pads to vl
+    if np.ndim(source) == 0:
+        return np.asarray(
+            bfs_k.bfs(radj, source, vl=vl, interpret=interpret))
+    return np.stack(
+        [np.asarray(bfs_k.bfs(radj, int(s), vl=vl, interpret=interpret))
+         for s in np.asarray(source)], axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -324,8 +391,8 @@ def bfs(
 def pagerank(
     graph: EllpackGraph,
     *,
-    damping: float = 0.85,
-    iters: int = 20,
+    damping=0.85,
+    iters=20,
     vl: int = 256,
     sigma: int | None = None,
     layout: str = "ell",
@@ -335,6 +402,11 @@ def pagerank(
 
     ``layout="sell"`` uses in-degree-sorted, width-bucketed reverse
     adjacency (see :func:`bfs`).
+
+    ``damping`` / ``iters`` may be scalars or sequences (broadcast against
+    each other): sequences return stacked (n_nodes, k) ranks, one column
+    per configuration; on the SELL layout every power step is one launch
+    set for all k columns, on ELLPACK the configurations run one by one.
     """
     if layout not in ("ell", "sell"):
         raise ValueError(f"unknown layout {layout!r}: expected 'ell' or 'sell'")
@@ -349,12 +421,20 @@ def pagerank(
             n, damping=damping, iters=iters, interpret=interpret,
         )
         return np.asarray(rank)
-    radj = _pad_graph(graph.transpose().adj, vl)
-    deg = jnp.asarray(
-        np.pad(graph.out_degree, (0, radj.shape[0] - n)).astype(np.float64)
-    )
-    rank = pr_k.pagerank(
-        jnp.asarray(radj), deg, damping=damping, iters=iters, vl=vl,
-        n_real=n, interpret=interpret,
-    )
-    return np.asarray(rank[:n])
+    radj = jnp.asarray(graph.transpose().adj)  # pagerank_step auto-pads
+    deg = jnp.asarray(graph.out_degree.astype(np.float64))
+    if np.ndim(damping) == 0 and np.ndim(iters) == 0:
+        rank = pr_k.pagerank(
+            radj, deg, damping=damping, iters=iters, vl=vl,
+            interpret=interpret,
+        )
+        return np.asarray(rank[:n])
+    dampings, iters_arr = pr_k.broadcast_configs(damping, iters)
+    cols = [
+        np.asarray(pr_k.pagerank(
+            radj, deg, damping=float(d), iters=int(it), vl=vl,
+            interpret=interpret,
+        )[:n])
+        for d, it in zip(dampings, iters_arr)
+    ]
+    return np.stack(cols, axis=1)

@@ -5,7 +5,16 @@ contributions of all in-neighbors of a ``vl``-node block with one indexed
 gather per adjacency column tile and reduces them.  The contribution vector
 (rank / out_degree) stays VMEM-resident; adjacency streams.
 
-Grid: (n_nodes / vl,).  VL is the node-block width, exactly the paper's knob.
+The SELL variants are thin drivers over the batched execution core
+(:mod:`repro.kernels.sell_core`): the power iterate is a stacked (n + 1, k)
+column matrix — one column per (damping, iters) configuration — and only
+the combine op (damped pull-sum plus dangling mass) lives here.  The
+per-bucket launch + scatter loop is :func:`sell_core.bucketed_node_step`,
+shared with BFS.
+
+Grid: (n_nodes / vl,).  VL is the node-block width, exactly the paper's
+knob.  Node counts that do not divide ``vl`` are padded internally (and the
+pad trimmed from the result).
 """
 from __future__ import annotations
 
@@ -13,7 +22,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.kernels import sell_core
 
 PAD = -1
 
@@ -40,12 +52,18 @@ def pagerank_step(
     """One power-iteration step.
 
     ``consts`` = [(1-d)/n, d, dangling_mass/n] as a (3,) array of the rank
-    dtype (kept in SMEM-like resident block).
+    dtype (kept in SMEM-like resident block).  ``n`` need not divide ``vl``:
+    the node block is padded with PAD rows (zero contribution) and the pad
+    is trimmed from the result.
     """
     n, width = radj.shape
-    assert n % vl == 0, "pad the node count to a multiple of vl"
-    grid = (n // vl,)
-    return pl.pallas_call(
+    if n % vl:
+        pad = vl - n % vl
+        radj = jnp.pad(radj, ((0, pad), (0, 0)), constant_values=PAD)
+        contrib = jnp.pad(contrib, (0, pad))
+    n_pad = radj.shape[0]
+    grid = (n_pad // vl,)
+    out = pl.pallas_call(
         _pr_step_kernel,
         grid=grid,
         in_specs=[
@@ -54,17 +72,28 @@ def pagerank_step(
             pl.BlockSpec(consts.shape, lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((vl,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), contrib.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), contrib.dtype),
         interpret=interpret,
     )(radj, contrib, consts)
+    return out[:n]
 
 
-def _pr_sell_step_kernel(radj_ref, contrib_ref, consts_ref, out_ref):
+def _pr_sell_step_kernel(radj_ref, nodes_ref, contrib_ref, consts_ref, out_ref):
+    """The PageRank combine op: damped pull-sum.
+
+    Rank-polymorphic over the iterate: (n + 1,) contributions keep the
+    single-configuration fast path, (n + 1, k) advances k stacked
+    (damping, iters) configurations (one RHS column each, consts (3, k))
+    through the same launch.
+    """
+    del nodes_ref                             # pull-only: no own-state gather
     radj = radj_ref[0]                        # (C, W_b)
     mask = radj != PAD
     safe = jnp.where(mask, radj, 0)
-    g = jnp.where(mask, contrib_ref[safe], 0.0)
-    pulled = jnp.sum(g, axis=1)
+    gathered = contrib_ref[safe]              # (C, W_b) or (C, W_b, k)
+    if gathered.ndim == 3:
+        mask = mask[..., None]
+    pulled = jnp.sum(jnp.where(mask, gathered, 0.0), axis=1)
     base, damping, dangling_term = consts_ref[0], consts_ref[1], consts_ref[2]
     out_ref[0] = base + damping * (pulled + dangling_term)
 
@@ -80,27 +109,34 @@ def pagerank_step_sell(
 ) -> jnp.ndarray:
     """One power step over width-bucketed, in-degree-sorted adjacency.
 
-    ``contrib`` has length n + 1 (dump slot = 0); the per-bucket results are
-    scattered back to original node order through ``bucket_nodes`` (padding
-    lanes land in the dump slot).  Returns the new (n + 1,) rank vector.
+    ``contrib`` is (n + 1,) for a single configuration or (n + 1, k) for k
+    stacked ones (dump slot = 0); ``consts`` is (3,) or (3, k) to match.
+    The per-bucket results are scattered back to original node order
+    through ``bucket_nodes``; returns the new rank matrix, same shape as
+    ``contrib``.
     """
-    rank = jnp.zeros_like(contrib)
-    for radj, nodes in zip(bucket_radj, bucket_nodes):
-        s, c, w = radj.shape
-        out = pl.pallas_call(
-            _pr_sell_step_kernel,
-            grid=(s,),
-            in_specs=[
-                pl.BlockSpec((1, c, w), lambda i: (i, 0, 0)),
-                pl.BlockSpec(contrib.shape, lambda i: (0,)),    # resident
-                pl.BlockSpec(consts.shape, lambda i: (0,)),
-            ],
-            out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
-            out_shape=jax.ShapeDtypeStruct((s, c), contrib.dtype),
-            interpret=interpret,
-        )(radj, contrib, consts)
-        rank = rank.at[nodes.reshape(-1)].set(out.reshape(-1))
-    return rank.at[-1].set(0.0)               # keep the dump slot inert
+    out = sell_core.bucketed_node_step(
+        _pr_sell_step_kernel, bucket_radj, bucket_nodes,
+        (contrib, consts), jnp.zeros_like(contrib), interpret=interpret,
+    )
+    return out.at[-1].set(0.0)                # keep the dump slot inert
+
+
+def broadcast_configs(damping, iters) -> tuple[np.ndarray, np.ndarray]:
+    """Broadcast scalar-or-sequence ``damping`` / ``iters`` against each
+    other into equal-length config columns — the one definition of the
+    batched-PageRank request shape (shared with :func:`repro.kernels.ops
+    .pagerank`'s per-column ELLPACK fallback)."""
+    dampings = np.atleast_1d(np.asarray(damping, np.float64))
+    iters_arr = np.atleast_1d(np.asarray(iters, np.int64))
+    k = max(len(dampings), len(iters_arr))
+    try:
+        return (np.broadcast_to(dampings, (k,)),
+                np.broadcast_to(iters_arr, (k,)))
+    except ValueError:
+        raise ValueError(
+            f"damping ({len(dampings)}) and iters ({len(iters_arr)}) must "
+            "be scalars or equal-length sequences") from None
 
 
 def pagerank_sell(
@@ -109,30 +145,55 @@ def pagerank_sell(
     out_degree: jnp.ndarray,
     n_nodes: int,
     *,
-    damping: float = 0.85,
-    iters: int = 20,
+    damping=0.85,
+    iters=20,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Full PageRank over bucketed SELL reverse adjacency.
+    """Full PageRank over bucketed SELL reverse adjacency, batched configs.
 
-    ``out_degree`` is the (n_nodes,) degree vector in *original* node order;
-    returns (n_nodes,) ranks in original order.
+    ``damping`` / ``iters`` may be scalars or sequences: configurations are
+    broadcast against each other and become RHS columns, so k requests run
+    as one launch set per power step.  A column whose ``iters`` budget is
+    exhausted freezes while longer ones keep iterating.  ``out_degree`` is
+    the (n_nodes,) degree vector in *original* node order; returns
+    (n_nodes,) ranks for scalar inputs, (n_nodes, k) otherwise.
     """
+    scalar = np.ndim(damping) == 0 and np.ndim(iters) == 0
     n = n_nodes
     dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
-    rank = jnp.full((n,), 1.0 / n, dtype)
-    deg = out_degree.astype(dtype)
-    zero = jnp.zeros((1,), dtype)
-    for _ in range(iters):
+    if scalar:                                # single-column fast path
+        rank = jnp.full((n,), 1.0 / n, dtype)
+        deg = out_degree.astype(dtype)
+        zero = jnp.zeros((1,), dtype)
+        for _ in range(int(iters)):
+            contrib = jnp.where(deg > 0, rank / jnp.maximum(deg, 1), 0.0)
+            dangling = jnp.sum(jnp.where(deg == 0, rank, 0.0))
+            consts = jnp.stack(
+                [(1.0 - damping) / n, damping, dangling / n]).astype(dtype)
+            new = pagerank_step_sell(
+                bucket_radj, bucket_nodes,
+                jnp.concatenate([contrib, zero]),   # dump slot contributes 0
+                consts, interpret=interpret,
+            )
+            rank = new[:n]
+        return rank
+    dampings, iters_arr = broadcast_configs(damping, iters)
+    k = len(dampings)
+    rank = jnp.full((n, k), 1.0 / n, dtype)
+    deg = out_degree.astype(dtype)[:, None]   # (n, 1) broadcasts over columns
+    d = jnp.asarray(dampings, dtype)          # (k,)
+    zero_row = jnp.zeros((1, k), dtype)
+    for t in range(1, int(iters_arr.max()) + 1):
         contrib = jnp.where(deg > 0, rank / jnp.maximum(deg, 1), 0.0)
-        dangling = jnp.sum(jnp.where(deg == 0, rank, 0.0))
-        consts = jnp.stack([(1.0 - damping) / n, damping, dangling / n]).astype(dtype)
+        dangling = jnp.sum(jnp.where(deg == 0, rank, 0.0), axis=0)   # (k,)
+        consts = jnp.stack([(1.0 - d) / n, d, dangling / n]).astype(dtype)
         new = pagerank_step_sell(
             bucket_radj, bucket_nodes,
-            jnp.concatenate([contrib, zero]),   # dump slot contributes 0
+            jnp.concatenate([contrib, zero_row]),   # dump slot contributes 0
             consts, interpret=interpret,
         )
-        rank = new[:n]
+        active = jnp.asarray(t <= iters_arr)        # freeze finished columns
+        rank = jnp.where(active[None, :], new[:n], rank)
     return rank
 
 
@@ -149,10 +210,17 @@ def pagerank(
     """Full PageRank: ``iters`` power steps over the reverse adjacency.
 
     ``n_real`` excludes VL-padding nodes from the rank mass and dangling sum
-    (padded rows produce garbage entries that callers trim).
+    (padded rows produce garbage entries that callers trim); node counts
+    that do not divide ``vl`` are padded here once — not once per power
+    step — and the pad trimmed from the result.
     """
+    n0 = radj.shape[0]
+    n = n_real if n_real is not None else n0
+    if n0 % vl:
+        pad = vl - n0 % vl
+        radj = jnp.pad(radj, ((0, pad), (0, 0)), constant_values=PAD)
+        out_degree = jnp.pad(out_degree, (0, pad))
     n_pad = radj.shape[0]
-    n = n_real if n_real is not None else n_pad
     dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
     real = jnp.arange(n_pad) < n
     rank = jnp.where(real, 1.0 / n, 0.0).astype(dtype)
@@ -162,4 +230,4 @@ def pagerank(
         dangling = jnp.sum(jnp.where(real & (deg == 0), rank, 0.0))
         consts = jnp.stack([(1.0 - damping) / n, damping, dangling / n]).astype(dtype)
         rank = pagerank_step(radj, contrib, consts, vl=vl, interpret=interpret)
-    return rank
+    return rank[:n0]

@@ -1,13 +1,11 @@
 """Width-bucketed SELL-C-sigma SpMV (paper §3.1, Gómez et al. [2]).
 
-The device-executable form of SELL-C-sigma: slices are grouped into
-power-of-two width buckets and every bucket is a dense slice-transposed
-(n_slices_b, W_b, C) slab, so each bucket runs the same gather-MAC schedule
-as :mod:`repro.kernels.spmv` — one ``pallas_call`` per bucket, one slice of
-C rows per grid step — but only pays its *own* width in padded FLOPs, not
-the global max.  The per-bucket partial results are scattered back to the
-original row order on device through the bucket row maps (padding lanes
-land in a dump slot that the final trim drops).
+Since the multi-RHS refactor this module is a thin driver: the bucketed
+gather-MAC schedule, the RHS tiling, and the row scatter all live in
+:mod:`repro.kernels.sell_core`; ``spmv_sell`` is the k = 1 column of
+:func:`repro.kernels.sell_core.spmm_sell` and keeps its historical
+signature so existing call sites (and the uniform-width comparisons in the
+benchmarks) are untouched.
 
 Bucketing bounds the number of kernel launches by log2(max_width) while the
 padded-nnz tracks the sigma-sorted per-slice widths: on skewed row-length
@@ -20,9 +18,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.spmv import spmv_ell
+from repro.kernels.sell_core import spmm_sell
 
 PAD = -1
+
+__all__ = ["PAD", "spmm_sell", "spmv_sell"]
 
 
 @functools.partial(
@@ -42,17 +42,11 @@ def spmv_sell(
 
     ``bucket_cols[b]``/``bucket_vals[b]``: (n_slices_b, W_b, C) slabs;
     ``bucket_rows[b]``: (n_slices_b, C) original-row scatter map with
-    ``n_rows`` marking padding lanes.  Each bucket runs the uniform-width
-    Pallas kernel; the scatter back to original row order happens on device
-    (every real row appears in exactly one bucket, so plain ``set`` works).
+    ``n_rows`` marking padding lanes.  The single-RHS column of the batched
+    core: one lane of the k axis, identical tiles and scatter.
     """
-    dtype = bucket_vals[0].dtype if bucket_vals else x.dtype
-    y = jnp.zeros(n_rows + 1, dtype)          # +1 dump slot for padding lanes
-    for cols, vals, rows in zip(bucket_cols, bucket_vals, bucket_rows):
-        yb = spmv_ell(
-            cols, vals, x,
-            w_block=min(w_block, cols.shape[1]),
-            interpret=interpret,
-        )
-        y = y.at[rows.reshape(-1)].set(yb)
-    return y[:n_rows]
+    y = spmm_sell(
+        bucket_cols, bucket_vals, bucket_rows, x[:, None],
+        n_rows=n_rows, w_block=w_block, k_block=1, interpret=interpret,
+    )
+    return y[:, 0]

@@ -1,0 +1,197 @@
+"""The one batched SELL execution core: multi-RHS gather kernels + scatter.
+
+The paper's amortization argument — long vectors hide memory latency by
+keeping many independent element streams in flight — applies across
+*requests* just as it applies across rows: k right-hand sides against one
+matrix fill the lane dimension that a single RHS leaves idle.  This module
+is the single device-execution core every SELL-layout kernel drives:
+
+* :func:`spmm_sell` — ``Y[:, k] = A @ X[:, k]`` over width-bucketed SELL
+  slabs, the k = 1 column of which is exactly the old ``spmv_sell``.  The
+  RHS axis is tiled by ``k_block`` (co-tuned with (C, sigma, w_block) by
+  :func:`repro.core.autotune.tune_sell_layout`) as a third grid axis, so a
+  whole coalesced request group runs as ONE launch set instead of a Python
+  loop of per-request calls.
+* :func:`bucketed_node_step` — the shared per-bucket launch + scatter loop
+  of the graph kernels: BFS and PageRank supply only their combine kernels
+  (frontier test, damped pull-sum) and their per-step state as stacked
+  (n + 1, k) columns; the slice/scatter plumbing that used to be duplicated
+  in ``kernels/bfs.py`` and ``kernels/pagerank.py`` lives here once.
+
+Both entry points keep the SELL contract of :mod:`repro.kernels.sell`:
+every real row/node appears in exactly one bucket, padding lanes scatter
+into a dump slot (index ``n``) that drivers trim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.sparse.formats import pow2_ceil
+
+PAD = -1
+
+__all__ = ["PAD", "bucketed_node_step", "pow2_ceil", "spmm_sell"]
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS SpMM
+# ---------------------------------------------------------------------------
+
+
+def _spmm_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    """Gather-MAC over one (W_blk, C) tile for a ``k_blk`` tile of RHS.
+
+    Grid is (n_slices, n_kblocks, n_wblocks) with the W axis innermost so
+    the revisited y block accumulates across W tiles per (slice, k-tile).
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    cols = cols_ref[0]                       # (W_blk, C) int32
+    vals = vals_ref[0]                       # (W_blk, C)
+    mask = cols != PAD
+    safe = jnp.where(mask, cols, 0)
+    gathered = x_ref[safe]                   # VMEM gather, (W_blk, C, k_blk)
+    acc = jnp.sum(
+        jnp.where(mask[..., None], vals[..., None] * gathered, 0), axis=0
+    )                                        # (C, k_blk)
+    y_ref[0] += acc.astype(y_ref.dtype)
+
+
+def _spmm_bucket(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    w_block: int,
+    k_tile: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    """One bucket: (n_slices, W_b, C) slab x (n_cols, k) -> (n_slices*C, k).
+
+    ``x``'s k axis must already be padded to a multiple of ``k_tile`` (the
+    caller owns the k_block policy so every bucket of a launch shares one
+    RHS tiling).
+    """
+    n_slices, width, c = cols.shape
+    k = x.shape[1]
+    w_block = min(w_block, width)
+    if width % w_block:
+        pad = w_block - width % w_block
+        cols = jnp.pad(cols, ((0, 0), (0, pad), (0, 0)), constant_values=PAD)
+        vals = jnp.pad(vals, ((0, 0), (0, pad), (0, 0)))
+        width += pad
+    grid = (n_slices, k // k_tile, width // w_block)
+    out = pl.pallas_call(
+        _spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w_block, c), lambda i, kk, j: (i, j, 0)),
+            pl.BlockSpec((1, w_block, c), lambda i, kk, j: (i, j, 0)),
+            pl.BlockSpec((x.shape[0], k_tile), lambda i, kk, j: (0, kk)),
+        ],
+        out_specs=pl.BlockSpec((1, c, k_tile), lambda i, kk, j: (i, 0, kk)),
+        out_shape=jax.ShapeDtypeStruct((n_slices, c, k), vals.dtype),
+        interpret=interpret,
+    )(cols, vals, x)
+    return out.reshape(n_slices * c, k)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "w_block", "k_block", "interpret")
+)
+def spmm_sell(
+    bucket_cols: tuple[jnp.ndarray, ...],
+    bucket_vals: tuple[jnp.ndarray, ...],
+    bucket_rows: tuple[jnp.ndarray, ...],
+    x: jnp.ndarray,
+    *,
+    n_rows: int,
+    w_block: int = 8,
+    k_block: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Y = A @ X over width-bucketed SELL slabs; X is (n_cols, k).
+
+    Returns Y of shape (n_rows, k).  ``k_block`` caps the RHS tile: the k
+    axis is padded internally to the pow2 tile one grid cell processes.
+    Note that jit still specializes on the *incoming* (n_cols, k) shape —
+    callers serving variable group sizes should pow2-pad their RHS stack
+    first (the service's ``_pow2_pad``) so group sizes share log2 compiled
+    programs.  k = 1 reproduces the old ``spmv_sell`` schedule bit for bit
+    (same tiles, one RHS lane).
+    """
+    k = x.shape[1]
+    kp = min(max(int(k_block), 1), pow2_ceil(k))
+    if k % kp:
+        x = jnp.pad(x, ((0, 0), (0, kp - k % kp)))
+    dtype = bucket_vals[0].dtype if bucket_vals else x.dtype
+    y = jnp.zeros((n_rows + 1, x.shape[1]), dtype)  # +1 dump slot for pads
+    for cols, vals, rows in zip(bucket_cols, bucket_vals, bucket_rows):
+        yb = _spmm_bucket(
+            cols, vals, x, w_block=w_block, k_tile=kp, interpret=interpret
+        )
+        y = y.at[rows.reshape(-1)].set(yb)
+    return y[:n_rows, :k]
+
+
+# ---------------------------------------------------------------------------
+# Shared bucket-launch + scatter loop for the graph kernels
+# ---------------------------------------------------------------------------
+
+
+def bucketed_node_step(
+    kernel: Callable,
+    bucket_adj: tuple[jnp.ndarray, ...],
+    bucket_nodes: tuple[jnp.ndarray, ...],
+    resident: Sequence[jnp.ndarray],
+    out_init: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Run ``kernel`` over every (n_slices_b, C, W_b) bucket and scatter.
+
+    ``kernel(adj_ref, nodes_ref, *resident_refs, out_ref)`` sees one
+    (1, C, W_b) adjacency tile, its (1, C) original-node map, every
+    ``resident`` array whole (state columns, constants), and writes a
+    (1, C) or (1, C, k) output tile — the per-kernel combine op.  The
+    per-bucket results are scattered back to original node order through
+    the node maps (padding lanes land in the dump slot of ``out_init``,
+    shape (n + 1,) or (n + 1, k)); this loop is the one copy of the
+    slice/scatter plumbing shared by BFS and PageRank.
+
+    ``out_init``'s rank selects the schedule: 1-D keeps the single-column
+    fast path (no trailing RHS axis to drag through every gather — in
+    interpret mode that costs ~2x), 2-D advances k stacked columns per
+    launch.
+    """
+    out = out_init
+    batched = out.ndim == 2
+    for adj, nodes in zip(bucket_adj, bucket_nodes):
+        s, c, w = adj.shape
+        tile = (1, c, out.shape[1]) if batched else (1, c)
+        res = pl.pallas_call(
+            kernel,
+            grid=(s,),
+            in_specs=[
+                pl.BlockSpec((1, c, w), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, c), lambda i: (i, 0)),
+                *[
+                    pl.BlockSpec(r.shape, lambda i, nd=r.ndim: (0,) * nd)
+                    for r in resident
+                ],
+            ],
+            out_specs=pl.BlockSpec(tile, lambda i, nd=len(tile): (i,) + (0,) * (nd - 1)),
+            out_shape=jax.ShapeDtypeStruct((s,) + tile[1:], out.dtype),
+            interpret=interpret,
+        )(adj, nodes, *resident)
+        out = out.at[nodes.reshape(-1)].set(res.reshape((s * c,) + tile[2:]))
+    return out

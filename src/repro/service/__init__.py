@@ -8,7 +8,7 @@ The layer that makes the paper kernels callable as a system: operands
 the LM batcher.  See README "Serving the kernels".
 """
 from repro.service.registry import KernelRegistry, RegisteredOperand
-from repro.service.service import KernelRequest, KernelService
+from repro.service.service import KernelRequest, KernelService, QueueFull
 from repro.service.tunecache import (
     OperandSignature,
     SchemaVersionError,
@@ -21,6 +21,7 @@ __all__ = [
     "KernelRequest",
     "KernelService",
     "OperandSignature",
+    "QueueFull",
     "RegisteredOperand",
     "SchemaVersionError",
     "TuneCache",

@@ -25,7 +25,14 @@ from repro.sparse.formats import CSRMatrix, SellSlabs, to_csr
 
 @dataclasses.dataclass
 class RegisteredOperand:
-    """One served operand: host container + tuned device-ready arrays."""
+    """One served operand: host container + tuned device-ready arrays.
+
+    The tuned result carries the co-selected ``k_block`` — the RHS tile of
+    the batched SpMM core — so the service can collapse a whole coalesced
+    request group into one ``spmm_sell`` launch against these arrays.
+    ``launches`` counts those batched core launches (the launch-counter
+    hook: one per coalesced group, not one per request).
+    """
 
     name: str
     kind: str                               # matrix | graph | fft
@@ -34,8 +41,10 @@ class RegisteredOperand:
     slabs: Any = None                       # SellSlabs | SellGraphSlabs
     device_arrays: dict = dataclasses.field(default_factory=dict)
     n: int = 0                              # n_rows / n_nodes / fft length
+    n_cols: int = 0                         # RHS length for matrix operands
     register_us: float = 0.0                # wall time spent registering
     tune_was_cached: bool = False
+    launches: int = 0                       # batched core launches served
 
     @property
     def pad_factor(self) -> float:
@@ -105,7 +114,7 @@ class KernelRegistry:
         )
         op = RegisteredOperand(
             name=name, kind="matrix", signature=sig, tuned=tuned,
-            slabs=slabs, n=csr.n_rows,
+            slabs=slabs, n=csr.n_rows, n_cols=csr.n_cols,
             tune_was_cached=self.cache.hits > before,
         )
         op.device_arrays = _matrix_device_arrays(slabs)

@@ -9,18 +9,29 @@ Scheduling is the same slot-based admission loop the LM batcher runs
 (:class:`repro.serve.slots.SlotLoop` — one batching core, two engines).  The
 service's ``execute`` hook is where kernel-specific coalescing happens: all
 active requests against the same registered operand form one group per
-scheduling round, so
+scheduling round, and every group collapses into a single launch of the
+batched execution core:
 
-* FFT requests of equal length are stacked into a single batched
-  ``fft_stockham`` call (true micro-batching — the kernel has a batch axis);
-* SpMV / BFS / PageRank groups share one set of prebuilt device slabs and
-  tuned (C, sigma, w_block) — zero per-request packing or tuning; the
-  per-request kernel launches reuse the group's arrays (a multi-RHS SpMV
-  kernel would collapse these further; noted as future work).
+* SpMV requests stack their x vectors as RHS columns of ONE
+  ``sell_core.spmm_sell`` call (the multi-RHS SpMM kernel, k_block
+  co-tuned at registration);
+* BFS requests stack their sources, PageRank requests their
+  (damping, iters) configurations, as columns of one batched
+  ``bfs_sell`` / ``pagerank_sell`` drive;
+* FFT requests of equal length stack into a single batched
+  ``fft_stockham`` call.
+
+``max_queue`` bounds the admission queue: a full queue rejects the submit
+with :class:`QueueFull` (counted in ``stats["rejected"]``) instead of
+buffering unboundedly — the backpressure signal a fronting load balancer
+needs.  Per-request submit/finish timestamps feed
+:meth:`latency_percentiles`.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
 from typing import Any, Sequence
 
 import numpy as np
@@ -29,6 +40,21 @@ from repro.service.registry import KernelRegistry, RegisteredOperand
 from repro.serve.slots import SlotLoop
 
 OPS = ("spmv", "bfs", "pagerank", "fft")
+
+
+class QueueFull(RuntimeError):
+    """The service's admission queue is at ``max_queue``; retry after a
+    ``step`` (or shed the request upstream)."""
+
+
+def _pow2_pad(items: list) -> list:
+    """Pad a request-column list to the next power of two by repeating the
+    last element.  The padding columns compute throwaway results; what they
+    buy is a bounded set of compiled batch shapes (k in {1, 2, 4, ...})
+    across arbitrary coalesced group sizes."""
+    from repro.kernels.sell_core import pow2_ceil
+
+    return items + [items[-1]] * (pow2_ceil(len(items)) - len(items))
 
 
 @dataclasses.dataclass
@@ -40,6 +66,8 @@ class KernelRequest:
     params: dict = dataclasses.field(default_factory=dict)
     result: Any = None
     error: str | None = None
+    submit_t: float = 0.0       # perf_counter at submit
+    done_t: float = 0.0         # perf_counter when the result/error landed
 
     @property
     def done(self) -> bool:
@@ -50,30 +78,52 @@ class KernelService(SlotLoop[KernelRequest]):
     """Micro-batching scheduler over a :class:`KernelRegistry`."""
 
     def __init__(self, registry: KernelRegistry, n_slots: int = 8,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 max_queue: int | None = None):
         super().__init__(n_slots)
         from repro.kernels.ops import default_interpret
 
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(
+                f"max_queue must be >= 1 (or None for unbounded), got "
+                f"{max_queue}: a zero-capacity queue rejects every submit "
+                "and the reject-then-step retry pattern would spin forever")
         self.registry = registry
         self.interpret = default_interpret() if interpret is None else interpret
+        self.max_queue = max_queue
         self._next_rid = 0
         self._by_rid: dict[int, KernelRequest] = {}
+        # bounded window: a long-running server must not grow one float per
+        # request served forever; percentiles describe recent traffic
+        self._latencies_us: deque[float] = deque(maxlen=8192)
         self.stats = {
-            "submitted": 0, "served": 0, "failed": 0, "steps": 0,
-            "groups": 0, "coalesced": 0, "max_group": 0,
+            "submitted": 0, "served": 0, "failed": 0, "rejected": 0,
+            "steps": 0, "groups": 0, "coalesced": 0, "max_group": 0,
+            "launches": 0,
         }
 
     # -- async API ---------------------------------------------------------
     def submit(self, op: str, operand: str, payload: Any = None,
                **params) -> int:
-        """Enqueue one kernel request; returns its request id immediately."""
+        """Enqueue one kernel request; returns its request id immediately.
+
+        Raises :class:`QueueFull` (and counts the rejection) when
+        ``max_queue`` requests are already waiting — backpressure belongs
+        to the caller, not to an unbounded buffer.
+        """
         if op not in OPS:
             raise ValueError(f"unknown op {op!r}: expected one of {OPS}")
         self.registry.get(operand)          # fail fast on unknown operands
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.stats["rejected"] += 1
+            raise QueueFull(
+                f"admission queue is full ({self.max_queue} waiting); "
+                "step() the service or shed load")
         rid = self._next_rid
         self._next_rid += 1
         req = KernelRequest(rid=rid, op=op, operand=operand,
-                            payload=payload, params=dict(params))
+                            payload=payload, params=dict(params),
+                            submit_t=time.perf_counter())
         self._by_rid[rid] = req
         super().submit(req)
         self.stats["submitted"] += 1
@@ -119,12 +169,28 @@ class KernelService(SlotLoop[KernelRequest]):
         """Run the loop until every submitted request completes."""
         return self.run(max_steps=max_steps)
 
+    def latency_percentiles(self) -> dict[str, float]:
+        """p50/p95/p99 of request latency (submit -> result landed), in us,
+        over the most recent 8192 retired requests (bounded window).
+        Empty service reports zeros."""
+        if not self._latencies_us:
+            return {"p50_us": 0.0, "p95_us": 0.0, "p99_us": 0.0}
+        lat = np.asarray(self._latencies_us)
+        p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+        return {
+            "p50_us": round(float(p50), 1),
+            "p95_us": round(float(p95), 1),
+            "p99_us": round(float(p99), 1),
+        }
+
     # -- SlotLoop hooks ----------------------------------------------------
     def done(self, req: KernelRequest) -> bool:
         return req.done
 
     def retire(self, req: KernelRequest) -> None:
         self.stats["served" if req.error is None else "failed"] += 1
+        if req.done_t:
+            self._latencies_us.append((req.done_t - req.submit_t) * 1e6)
 
     def execute(self, active: Sequence[tuple[int, KernelRequest]]) -> None:
         self.stats["steps"] += 1
@@ -143,6 +209,10 @@ class KernelService(SlotLoop[KernelRequest]):
                 for req in reqs:
                     if not req.done:
                         req.error = f"{type(exc).__name__}: {exc}"
+        now = time.perf_counter()
+        for _, req in active:
+            if req.done and not req.done_t:
+                req.done_t = now
 
     # -- kernel dispatch ---------------------------------------------------
     def _run_group(self, op: str, operand: RegisteredOperand,
@@ -150,81 +220,132 @@ class KernelService(SlotLoop[KernelRequest]):
         runner = getattr(self, f"_run_{op}")
         runner(operand, reqs)
 
+    def _count_launch(self, operand: RegisteredOperand) -> None:
+        """The launch-counter hook: one batched core call per coalesced
+        group, visible in ``stats['launches']`` and per operand."""
+        self.stats["launches"] += 1
+        operand.launches += 1
+
     @staticmethod
-    def _per_request(req: KernelRequest, call) -> None:
-        """Per-request launch isolation: one bad payload fails its own
-        request, never its coalesced groupmates (the group-level except in
-        ``execute`` only backstops failures shared by construction, like an
-        operand-kind mismatch or the single batched FFT launch)."""
-        try:
-            call()
-        except Exception as exc:  # noqa: BLE001 - errors belong to requests
-            req.error = f"{type(exc).__name__}: {exc}"
+    def _validated(reqs: list[KernelRequest], check) -> tuple[list, list]:
+        """Validate each request's payload BEFORE stacking the group: a
+        malformed request fails alone, never its coalesced groupmates.
+        Returns (good requests, their checked payloads)."""
+        good, payloads = [], []
+        for req in reqs:
+            try:
+                payloads.append(check(req))
+            except Exception as exc:  # noqa: BLE001 - belongs to the request
+                req.error = f"{type(exc).__name__}: {exc}"
+                continue
+            good.append(req)
+        return good, payloads
 
     def _run_spmv(self, operand, reqs):
-        from repro.kernels import sell as sell_k
+        """The whole group is ONE spmm_sell launch: request vectors become
+        RHS columns of the batched SELL core."""
+        from repro.kernels import sell_core
 
         if operand.kind != "matrix":
             raise TypeError(f"operand {operand.name!r} is not a matrix")
         import jax.numpy as jnp
 
         arrs, tuned = operand.device_arrays, operand.tuned
-        n_cols = operand.slabs.n_cols
-        for req in reqs:
-            def call(req=req):
-                # JAX clamps out-of-bounds gathers, so a wrong-sized x would
-                # return garbage as a "success" — validate explicitly
-                x = np.asarray(req.payload, np.float64)
-                if x.shape != (n_cols,):
-                    raise ValueError(
-                        f"x must have shape ({n_cols},), got {x.shape}")
-                y = sell_k.spmv_sell(
-                    arrs["cols"], arrs["vals"], arrs["rows"],
-                    jnp.asarray(x),
-                    n_rows=operand.n, w_block=tuned.w_block,
-                    interpret=self.interpret,
-                )
-                req.result = np.asarray(y)
+        n_cols = operand.n_cols
 
-            self._per_request(req, call)
+        def check(req):
+            # JAX clamps out-of-bounds gathers, so a wrong-sized x would
+            # return garbage as a "success" — validate explicitly
+            x = np.asarray(req.payload, np.float64)
+            if x.shape != (n_cols,):
+                raise ValueError(f"x must have shape ({n_cols},), got {x.shape}")
+            return x
+
+        good, xs = self._validated(reqs, check)
+        if not good:
+            return
+        # pow2-pad the RHS stack BEFORE the jitted core: jax.jit keys on
+        # the pre-pad (n_cols, k) shape, so without this every distinct
+        # group size would trace its own program (see _pow2_pad)
+        y = sell_core.spmm_sell(
+            arrs["cols"], arrs["vals"], arrs["rows"],
+            jnp.asarray(np.stack(_pow2_pad(xs), axis=1)),
+            n_rows=operand.n, w_block=tuned.w_block, k_block=tuned.k_block,
+            interpret=self.interpret,
+        )
+        self._count_launch(operand)
+        y = np.asarray(y)
+        for i, req in enumerate(good):
+            req.result = y[:, i]
 
     def _run_bfs(self, operand, reqs):
+        """The whole group is one batched drive: sources become frontier
+        columns, every level is a single launch set."""
         from repro.kernels import bfs as bfs_k
 
         if operand.kind != "graph":
             raise TypeError(f"operand {operand.name!r} is not a graph")
         arrs = operand.device_arrays
-        for req in reqs:
-            def call(req=req):
-                source = int(req.params.get("source", 0))
-                if not 0 <= source < operand.n:
-                    raise ValueError(
-                        f"source {source} out of range [0, {operand.n})")
-                dist = bfs_k.bfs_sell(
-                    arrs["adj"], arrs["nodes"], operand.n, source,
-                    interpret=self.interpret,
-                )
-                req.result = np.asarray(dist)
 
-            self._per_request(req, call)
+        def check(req):
+            source = int(req.params.get("source", 0))
+            if not 0 <= source < operand.n:
+                raise ValueError(f"source {source} out of range [0, {operand.n})")
+            return source
+
+        good, sources = self._validated(reqs, check)
+        if not good:
+            return
+        # a singleton group keeps the 1-D fast path (no RHS axis to drag
+        # through every gather); larger groups batch sources as columns,
+        # padded to a power of two (repeat the last source) so 1..n_slots
+        # group sizes share log2 compiled programs instead of one each
+        dist = bfs_k.bfs_sell(
+            arrs["adj"], arrs["nodes"], operand.n,
+            sources[0] if len(good) == 1 else _pow2_pad(sources),
+            interpret=self.interpret,
+        )
+        self._count_launch(operand)
+        dist = np.asarray(dist)
+        if len(good) == 1:
+            good[0].result = dist
+        else:
+            for i, req in enumerate(good):
+                req.result = dist[:, i]
 
     def _run_pagerank(self, operand, reqs):
+        """The whole group is one batched drive: (damping, iters) configs
+        become iterate columns, every power step is a single launch set."""
         from repro.kernels import pagerank as pr_k
 
         if operand.kind != "graph":
             raise TypeError(f"operand {operand.name!r} is not a graph")
         arrs = operand.device_arrays
-        for req in reqs:
-            def call(req=req):
-                rank = pr_k.pagerank_sell(
-                    arrs["adj"], arrs["nodes"], arrs["out_degree"], operand.n,
-                    damping=float(req.params.get("damping", 0.85)),
-                    iters=int(req.params.get("iters", 20)),
-                    interpret=self.interpret,
-                )
-                req.result = np.asarray(rank)
 
-            self._per_request(req, call)
+        def check(req):
+            return (float(req.params.get("damping", 0.85)),
+                    int(req.params.get("iters", 20)))
+
+        good, configs = self._validated(reqs, check)
+        if not good:
+            return
+        if len(good) == 1:                     # 1-D fast path (see _run_bfs)
+            damping, iters = configs[0]
+        else:                                  # pow2-padded columns, ditto
+            configs = _pow2_pad(configs)
+            damping = [d for d, _ in configs]
+            iters = [i for _, i in configs]
+        rank = pr_k.pagerank_sell(
+            arrs["adj"], arrs["nodes"], arrs["out_degree"], operand.n,
+            damping=damping, iters=iters, interpret=self.interpret,
+        )
+        self._count_launch(operand)
+        rank = np.asarray(rank)
+        if len(good) == 1:
+            good[0].result = rank
+        else:
+            for i, req in enumerate(good):
+                req.result = rank[:, i]
 
     def _run_fft(self, operand, reqs):
         """True micro-batch: stack every request's signal rows into one
@@ -236,39 +357,37 @@ class KernelService(SlotLoop[KernelRequest]):
         import jax.numpy as jnp
 
         n = operand.n
-        good, rows, spans = [], [], []
-        for req in reqs:
-            # validate per request BEFORE stacking: one malformed signal
-            # must fail its own request, not its coalesced groupmates —
-            # including when the validation itself raises (ragged lists)
-            try:
-                if np.iscomplexobj(req.payload):
-                    # float64 casting would silently drop the imaginary plane
-                    raise TypeError("complex signals are not supported; "
-                                    "pass split re/im planes")
-                sig = np.atleast_2d(np.asarray(req.payload, np.float64))
-                if sig.ndim != 2:
-                    raise ValueError(f"signal must be 1-D or 2-D (batch, n), "
-                                     f"got shape {sig.shape}")
-                if sig.shape[0] == 0:
-                    raise ValueError("empty signal batch (0 rows)")
-                if sig.shape[-1] != n:
-                    raise ValueError(f"signal length {sig.shape[-1]} != "
-                                     f"registered fft length {n}")
-            except Exception as exc:  # noqa: BLE001 - belongs to the request
-                req.error = f"{type(exc).__name__}: {exc}"
-                continue
-            spans.append((len(rows), len(rows) + sig.shape[0]))
-            rows.extend(sig)
-            good.append(req)
+
+        def check(req):
+            if np.iscomplexobj(req.payload):
+                # float64 casting would silently drop the imaginary plane
+                raise TypeError("complex signals are not supported; "
+                                "pass split re/im planes")
+            sig = np.atleast_2d(np.asarray(req.payload, np.float64))
+            if sig.ndim != 2:
+                raise ValueError(f"signal must be 1-D or 2-D (batch, n), "
+                                 f"got shape {sig.shape}")
+            if sig.shape[0] == 0:
+                raise ValueError("empty signal batch (0 rows)")
+            if sig.shape[-1] != n:
+                raise ValueError(f"signal length {sig.shape[-1]} != "
+                                 f"registered fft length {n}")
+            return sig
+
+        good, sigs = self._validated(reqs, check)
         if not good:
             return
+        rows, spans = [], []
+        for sig in sigs:
+            spans.append((len(rows), len(rows) + sig.shape[0]))
+            rows.extend(sig)
         batch = jnp.asarray(np.stack(rows))
         re, im = fft_k.fft_stockham(
             batch, jnp.zeros_like(batch),
             operand.device_arrays["wre"], operand.device_arrays["wim"],
             b_block=min(8, batch.shape[0]), interpret=self.interpret,
         )
+        self._count_launch(operand)
         re, im = np.asarray(re), np.asarray(im)
         for req, (lo, hi) in zip(good, spans):
             req.result = (re[lo:hi], im[lo:hi])

@@ -21,13 +21,18 @@ cost per operand *signature*:
   table;
 * a non-persisted packed-slab memo (:meth:`packed_get` / :meth:`packed_put`)
   lets hot paths (``ops.spmv``'s repack-on-mismatch) reuse device layouts
-  they already built instead of discarding the work.
+  they already built instead of discarding the work;
+* multi-worker serving shares one cache file safely: :meth:`save` holds an
+  advisory fcntl lock, re-reads what other workers persisted since our
+  load, and merges before writing — concurrent writers union their
+  entries instead of racing last-writer-wins.
 
 ``core.autotune`` consults the cache through the duck-typed
 ``get_sell``/``put_sell`` pair, so the core layer never imports this module.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import os
@@ -35,6 +40,11 @@ from collections import OrderedDict
 from typing import Any, Iterable, Mapping
 
 import numpy as np
+
+try:                                        # POSIX advisory locking
+    import fcntl
+except ImportError:                         # non-POSIX: locking degrades
+    fcntl = None
 
 from repro.core.autotune import SellTuneResult
 from repro.core.jsonstore import (
@@ -144,6 +154,32 @@ def operand_signature(obj: Any) -> OperandSignature:
 
 
 # ---------------------------------------------------------------------------
+# Cross-process coordination
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def _file_lock(path: str | None):
+    """Advisory exclusive lock on ``path + '.lock'`` (fcntl flock).
+
+    Serializes the load-merge-write critical section of :meth:`TuneCache.save`
+    across worker processes sharing one cache file.  Advisory by design:
+    readers of the store itself are safe without it (writes land via
+    atomic rename), and on platforms without fcntl the lock degrades to a
+    no-op (single-worker behavior, last writer wins).
+    """
+    if fcntl is None or path is None:
+        yield
+        return
+    with open(path + ".lock", "a+") as fh:
+        fcntl.flock(fh, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(fh, fcntl.LOCK_UN)
+
+
+# ---------------------------------------------------------------------------
 # The cache
 # ---------------------------------------------------------------------------
 
@@ -151,6 +187,7 @@ def operand_signature(obj: Any) -> OperandSignature:
 def _result_to_json(r: SellTuneResult) -> dict:
     return {
         "c": int(r.c), "sigma": int(r.sigma), "w_block": int(r.w_block),
+        "k_block": int(r.k_block),
         "cycles": float(r.cycles), "pad_factor": float(r.pad_factor),
         "table": [[int(c), int(s), float(pf), float(cy)]
                   for c, s, pf, cy in r.table],
@@ -160,6 +197,8 @@ def _result_to_json(r: SellTuneResult) -> dict:
 def _result_from_json(d: Mapping) -> SellTuneResult:
     return SellTuneResult(
         c=int(d["c"]), sigma=int(d["sigma"]), w_block=int(d["w_block"]),
+        # entries persisted before the multi-RHS core keep a working default
+        k_block=int(d.get("k_block", 8)),
         cycles=float(d["cycles"]), pad_factor=float(d["pad_factor"]),
         table=tuple((int(c), int(s), float(pf), float(cy))
                     for c, s, pf, cy in d["table"]),
@@ -188,9 +227,17 @@ class TuneCache:
     def __init__(self, path: str | None = None, strict: bool = True,
                  max_packed: int = 32):
         self.path = path
+        self.strict = strict
         self._entries: dict[str, dict] = {}
         self._hints: dict[str, int] = {}
         self._repacks: dict[str, int] = {}
+        # keys written by THIS instance since load/save — merge-on-save may
+        # only overlay these on the disk document; a key we merely loaded
+        # must not revert another worker's newer value
+        self._dirty_entries: set[str] = set()
+        self._dirty_hints: set[str] = set()
+        self._repack_delta: dict[str, int] = {}
+        self._hit_delta: dict[str, int] = {}
         #: in-memory packed-layout memo (device slabs are not JSON material);
         #: LRU-bounded — slabs are O(nnz) each, and a long-running process
         #: must not retain one per operand it ever served
@@ -199,7 +246,8 @@ class TuneCache:
         self.hits = 0
         self.misses = 0
         if path is not None and os.path.exists(path):
-            self._load(strict)
+            with _file_lock(path):
+                self._load(strict)
 
     def _load(self, strict: bool) -> None:
         doc = load_json(self.path)
@@ -209,16 +257,71 @@ class TuneCache:
         self._hints = {k: int(v) for k, v in doc.get("hints", {}).items()}
         self._repacks = {k: int(v) for k, v in doc.get("repacks", {}).items()}
 
-    def save(self) -> str:
+    def _merge_from_disk(self) -> None:
+        """Fold the current on-disk document in, overlaying only the keys
+        THIS instance wrote since its load: a newer value another worker
+        persisted for a key we merely loaded survives.  Runs inside the
+        save lock so concurrent workers can't interleave between the read
+        and the write.  Honors the instance's ``strict`` mode: a non-strict
+        cache that warned-and-ignored a stale store at load time must stay
+        able to replace it at save time, not wedge on the same document."""
+        doc = load_json(self.path)
+        if not check_schema_version(doc, SCHEMA_VERSION, self.path,
+                                    strict=self.strict):
+            return
+        self._entries = {
+            **self._entries,                   # stale base (keeps loaded keys
+            **doc.get("entries", {}),          #  a racing writer dropped)
+            **{k: self._entries[k] for k in self._dirty_entries
+               if k in self._entries},
+        }
+        self._hints = {
+            **self._hints,
+            **{k: int(v) for k, v in doc.get("hints", {}).items()},
+            **{k: self._hints[k] for k in self._dirty_hints
+               if k in self._hints},
+        }
+        # repack counts are event tallies: the true total is whatever is on
+        # disk plus the events THIS instance observed since its load
+        disk_repacks = {k: int(v) for k, v in doc.get("repacks", {}).items()}
+        for key, delta in self._repack_delta.items():
+            disk_repacks[key] = disk_repacks.get(key, 0) + delta
+        self._repacks = {**self._repacks, **disk_repacks}
+        # per-entry hit counters are tallies too: keys this instance wrote
+        # or hit get disk's count plus our delta, so concurrent workers'
+        # counts accumulate instead of being reverted or reset to 0
+        disk_entries = doc.get("entries", {})
+        for key in self._dirty_entries | set(self._hit_delta):
+            if key in self._entries:
+                base = int(disk_entries.get(key, {}).get("hits", 0))
+                self._entries[key] = {
+                    **self._entries[key],
+                    "hits": base + self._hit_delta.get(key, 0),
+                }
+
+    def save(self, merge: bool = True) -> str:
+        """Persist the cache.  ``merge`` (default) folds in entries other
+        workers saved since our load — under the advisory file lock, so a
+        fleet of serving processes sharing one cache path can't lose each
+        other's tunes to a last-writer-wins race."""
         if self.path is None:
             raise ValueError("TuneCache was created without a path")
-        doc = {
-            "schema_version": SCHEMA_VERSION,
-            "entries": self._entries,
-            "hints": self._hints,
-            "repacks": self._repacks,
-        }
-        return atomic_write_json(self.path, doc)
+        with _file_lock(self.path):
+            if merge and os.path.exists(self.path):
+                self._merge_from_disk()
+            doc = {
+                "schema_version": SCHEMA_VERSION,
+                "entries": self._entries,
+                "hints": self._hints,
+                "repacks": self._repacks,
+            }
+            out = atomic_write_json(self.path, doc)
+        # everything in memory is now persisted: nothing is dirty anymore
+        self._dirty_entries.clear()
+        self._dirty_hints.clear()
+        self._repack_delta.clear()
+        self._hit_delta.clear()
+        return out
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -250,6 +353,7 @@ class TuneCache:
             return None
         self.hits += 1
         entry["hits"] = int(entry.get("hits", 0)) + 1
+        self._hit_delta[key] = self._hit_delta.get(key, 0) + 1
         return _result_from_json(entry)
 
     def put_sell(self, key: str, result: SellTuneResult,
@@ -259,12 +363,14 @@ class TuneCache:
         entry.update(kernel=kernel, device=device, dtype=dtype,
                      machine=mtag, source=source, hits=0)
         self._entries[key] = entry
+        self._dirty_entries.add(key)
 
     # -- repack bookkeeping (ops.spmv's mismatch path) ---------------------
     def note_repack(self, key: str) -> int:
         """Record that an operand had to be repacked at serve time; the
         count persists so repeated mismatches show up in the artifact."""
         self._repacks[key] = self._repacks.get(key, 0) + 1
+        self._repack_delta[key] = self._repack_delta.get(key, 0) + 1
         return self._repacks[key]
 
     @property
@@ -291,6 +397,7 @@ class TuneCache:
 
     def set_hint(self, kernel: str, machine: str, vl: int) -> None:
         self._hints[f"{kernel}|{machine}"] = int(vl)
+        self._dirty_hints.add(f"{kernel}|{machine}")
 
     def warm_from_sweeps(self, store) -> int:
         """Seed VL hints from campaign cubes (offline warm start).

@@ -314,8 +314,16 @@ def csr_to_sell(m: CSRMatrix, c: int, sigma: int | None = None) -> SellCSigmaMat
     )
 
 
+def pow2_ceil(x: int) -> int:
+    """Smallest power of two >= x (>= 1) — the scalar form of
+    :func:`next_pow2`, shared by the batched-kernel RHS tiling and the
+    tuner's width cap so the rounding rule exists once."""
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
 def next_pow2(x: np.ndarray) -> np.ndarray:
-    """Element-wise next power of two (>= 1): the bucket width rounding."""
+    """Element-wise next power of two (>= 1): the bucket width rounding
+    (array form of :func:`pow2_ceil`)."""
     return (2 ** np.ceil(np.log2(np.maximum(x, 1)))).astype(np.int64)
 
 

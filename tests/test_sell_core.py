@@ -1,0 +1,252 @@
+"""Batched SELL execution core: multi-RHS SpMM, batched graph drivers,
+k_block co-tuning, and the auto-padding ELLPACK kernels.
+
+The load-bearing guarantees: (1) ``spmm_sell`` matches the dense reference
+over the whole (C, sigma, k_block) grid at 1e-10, including empty rows and
+all-empty matrices; (2) the k = 1 column is exactly the old ``spmv_sell``
+path (the SpMV driver is a view of the SpMM core, not a fork); (3) BFS
+sources and PageRank (damping, iters) configurations batch as RHS columns
+and match the per-request references; (4) the ELLPACK kernels auto-pad
+node counts that do not divide VL (prime-sized graphs) instead of
+asserting; (5) ``k_block`` is co-tuned, serialized through the TuneCache,
+and defaulted for pre-k entries.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.autotune import pick_k_block, tune_sell_layout
+from repro.graphs import gen as G
+from repro.kernels import bfs as bfs_k
+from repro.kernels import ops
+from repro.kernels import pagerank as pr_k
+from repro.kernels import sell_core
+from repro.kernels.sell import spmv_sell
+from repro.sparse import formats as F
+
+RNG = np.random.default_rng(42)
+
+
+def _slab_args(slabs):
+    return (
+        tuple(jnp.asarray(c) for c in slabs.bucket_cols),
+        tuple(jnp.asarray(v) for v in slabs.bucket_vals),
+        tuple(jnp.asarray(r) for r in slabs.bucket_rows),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SpMM vs dense reference over the (C, sigma, k_block) grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c,sigma_factor", [(4, 1), (16, 4), (32, 8)])
+@pytest.mark.parametrize("k,k_block", [(1, 1), (3, 2), (5, 8), (8, 4)])
+def test_spmm_sell_matches_dense_grid(c, sigma_factor, k, k_block):
+    csr = F.random_csr(75, 80, 5.0, seed=c * 100 + k, skew=1.0)
+    dense = F.csr_to_dense(csr)
+    x = np.random.default_rng(k).standard_normal((80, k))
+    slabs = F.csr_to_sell_slabs(csr, c=c, sigma=sigma_factor * c)
+    got = np.asarray(sell_core.spmm_sell(
+        *_slab_args(slabs), jnp.asarray(x),
+        n_rows=csr.n_rows, w_block=8, k_block=k_block, interpret=True,
+    ))
+    assert got.shape == (csr.n_rows, k)
+    np.testing.assert_allclose(got, dense @ x, rtol=1e-10, atol=1e-10)
+
+
+def test_spmm_sell_empty_rows_and_all_empty():
+    dense = np.zeros((6, 5))
+    dense[0, 1] = 2.0
+    dense[3, [0, 2, 4]] = [1.0, -1.5, 3.0]   # rows 1,2,4,5 empty
+    x = RNG.standard_normal((5, 3))
+    for mat in (dense, np.zeros((6, 5))):
+        csr = F.csr_from_dense(mat)
+        slabs = F.csr_to_sell_slabs(csr, c=4, sigma=8)
+        got = np.asarray(sell_core.spmm_sell(
+            *_slab_args(slabs), jnp.asarray(x),
+            n_rows=6, w_block=8, k_block=2, interpret=True,
+        ))
+        np.testing.assert_allclose(got, mat @ x, atol=1e-10)
+
+
+def test_spmm_k1_equals_spmv_sell_path():
+    """The k = 1 column of the SpMM core IS the SpMV driver's output."""
+    csr = F.random_csr(64, 64, 6.0, seed=9, skew=1.2)
+    slabs = F.csr_to_sell_slabs(csr, c=16, sigma=64)
+    x = RNG.standard_normal(64)
+    args = _slab_args(slabs)
+    via_spmm = np.asarray(sell_core.spmm_sell(
+        *args, jnp.asarray(x)[:, None],
+        n_rows=64, w_block=8, k_block=1, interpret=True,
+    ))[:, 0]
+    via_spmv = np.asarray(spmv_sell(
+        *args, jnp.asarray(x), n_rows=64, w_block=8, interpret=True))
+    np.testing.assert_array_equal(via_spmm, via_spmv)
+    np.testing.assert_allclose(via_spmv, csr.matvec(x), rtol=1e-10, atol=1e-10)
+
+
+def test_spmm_k_not_multiple_of_k_block_pads_and_trims():
+    csr = F.random_csr(40, 44, 4.0, seed=3)
+    dense = F.csr_to_dense(csr)
+    x = RNG.standard_normal((44, 7))          # 7 does not divide k_block=4
+    got = np.asarray(ops.spmm(csr, x, vl=8, k_block=4))
+    assert got.shape == (40, 7)
+    np.testing.assert_allclose(got, dense @ x, rtol=1e-10, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# ops-level stacked-RHS dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_ops_spmv_accepts_stacked_rhs_every_format():
+    csr = F.random_csr(50, 50, 4.0, seed=1, skew=0.8)
+    dense = F.csr_to_dense(csr)
+    x = RNG.standard_normal((50, 3))
+    want = dense @ x
+    for mat in (csr, F.csr_to_sell_slabs(csr, c=16),
+                F.csr_to_sell(csr, c=16), F.csr_to_ellpack(csr, c=16)):
+        got = np.asarray(ops.spmv(mat, x, vl=16))
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_ops_spmm_rejects_1d():
+    csr = F.random_csr(20, 20, 3.0, seed=0)
+    with pytest.raises(ValueError, match=r"\(n_cols, k\)"):
+        ops.spmm(csr, RNG.standard_normal(20), vl=8)
+
+
+# ---------------------------------------------------------------------------
+# Batched graph drivers: sources / configs as RHS columns
+# ---------------------------------------------------------------------------
+
+
+def test_bfs_sell_multi_source_matches_per_source():
+    g = G.rmat_graph(n_nodes=233, avg_degree=6, seed=5)   # prime-sized
+    sources = [0, 7, 100]
+    got = ops.bfs(g, sources, vl=32, layout="sell")
+    assert got.shape == (233, 3)
+    for i, s in enumerate(sources):
+        np.testing.assert_array_equal(got[:, i], G.bfs_reference(g, s))
+    # scalar source keeps the historical 1-D shape
+    assert ops.bfs(g, 7, vl=32, layout="sell").shape == (233,)
+
+
+def test_bfs_ell_multi_source_stacks_columns():
+    g = G.random_graph(n_nodes=64, avg_degree=4, seed=2)
+    got = ops.bfs(g, [1, 9], vl=32, layout="ell")
+    assert got.shape == (64, 2)
+    np.testing.assert_array_equal(got[:, 0], G.bfs_reference(g, 1))
+    np.testing.assert_array_equal(got[:, 1], G.bfs_reference(g, 9))
+
+
+def test_pagerank_sell_multi_config_matches_per_config():
+    g = G.random_graph(n_nodes=149, avg_degree=5, seed=4)  # prime-sized
+    got = ops.pagerank(g, damping=[0.85, 0.6], iters=[12, 5],
+                       vl=32, layout="sell")
+    assert got.shape == (149, 2)
+    np.testing.assert_allclose(
+        got[:, 0], G.pagerank_reference(g, damping=0.85, iters=12), rtol=1e-9)
+    np.testing.assert_allclose(
+        got[:, 1], G.pagerank_reference(g, damping=0.6, iters=5), rtol=1e-9)
+
+
+def test_pagerank_sell_broadcasts_scalar_against_sequence():
+    g = G.random_graph(n_nodes=50, avg_degree=4, seed=6)
+    got = ops.pagerank(g, damping=0.85, iters=[3, 8], vl=16, layout="sell")
+    assert got.shape == (50, 2)
+    np.testing.assert_allclose(
+        got[:, 0], G.pagerank_reference(g, iters=3), rtol=1e-9)
+    np.testing.assert_allclose(
+        got[:, 1], G.pagerank_reference(g, iters=8), rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Auto-padding ELLPACK kernels (no more n % vl assert)
+# ---------------------------------------------------------------------------
+
+
+def test_bfs_ell_kernel_auto_pads_prime_node_count():
+    g = G.random_graph(n_nodes=97, avg_degree=4, seed=11)
+    radj = jnp.asarray(g.transpose().adj)
+    got = np.asarray(bfs_k.bfs(radj, 3, vl=32, interpret=True))
+    assert got.shape == (97,)
+    np.testing.assert_array_equal(got, G.bfs_reference(g, 3))
+
+
+def test_pagerank_ell_kernel_auto_pads_prime_node_count():
+    g = G.random_graph(n_nodes=101, avg_degree=4, seed=12)
+    radj = jnp.asarray(g.transpose().adj)
+    deg = jnp.asarray(g.out_degree.astype(np.float64))
+    got = np.asarray(pr_k.pagerank(radj, deg, iters=8, vl=32, interpret=True))
+    np.testing.assert_allclose(
+        got, G.pagerank_reference(g, iters=8), rtol=1e-9)
+    assert got.sum() == pytest.approx(1.0, rel=1e-9)
+
+
+def test_ops_graph_kernels_on_prime_graph_both_layouts():
+    g = G.random_graph(n_nodes=83, avg_degree=4, seed=13)
+    want_bfs = G.bfs_reference(g, 2)
+    want_pr = G.pagerank_reference(g, iters=6)
+    for layout in ("ell", "sell"):
+        np.testing.assert_array_equal(
+            ops.bfs(g, 2, vl=32, layout=layout), want_bfs)
+        np.testing.assert_allclose(
+            ops.pagerank(g, iters=6, vl=32, layout=layout), want_pr,
+            rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# k_block co-tuning
+# ---------------------------------------------------------------------------
+
+
+def test_pick_k_block_is_pow2_and_budget_monotone():
+    assert pick_k_block(64, 1000) == 32        # roomy budget hits the cap
+    small = pick_k_block(64, 1000, vmem_budget=8.0 * 1000 * 4)
+    assert small < 32 and small & (small - 1) == 0
+    assert pick_k_block(8, 10**9) == 1         # X column alone blows VMEM
+
+
+def test_tune_sell_layout_co_selects_k_block():
+    csr = F.random_csr(600, 600, 6.0, seed=7, skew=1.0)
+    tuned = tune_sell_layout(csr.row_lengths, n_cols=csr.n_cols)
+    assert tuned.k_block >= 1
+    assert tuned.k_block & (tuned.k_block - 1) == 0
+    assert tuned.k_block == pick_k_block(tuned.c, csr.n_cols,
+                                         w_block=tuned.w_block)
+
+
+def test_tuned_w_and_k_blocks_fit_vmem_jointly():
+    """The co-tuned (w_block, k_block) pair must fit the budget TOGETHER:
+    X stack + (C, k) output tile + the double-buffered slab tile that
+    w_block actually claims."""
+    from repro.core.autotune import VMEM_BUDGET_BYTES
+
+    rng = np.random.default_rng(0)
+    lengths = rng.poisson(12, 50_000).clip(1)
+    n_cols = 2_000_000                         # X column = 16 MB resident
+    tuned = tune_sell_layout(lengths, n_cols=n_cols)
+    resident = (8.0 * (n_cols + tuned.c) * tuned.k_block
+                + 2 * tuned.w_block * tuned.c * 12.0)
+    assert resident <= VMEM_BUDGET_BYTES
+
+
+def test_tunecache_round_trips_k_block_and_defaults_old_entries(tmp_path):
+    from repro.service.tunecache import TuneCache, _result_from_json
+
+    csr = F.random_csr(120, 120, 5.0, seed=8)
+    path = str(tmp_path / "tune.json")
+    cache = TuneCache(path)
+    key = cache.sell_key("spmv", csr)
+    tuned = tune_sell_layout(csr.row_lengths, n_cols=csr.n_cols,
+                             cache=cache, cache_key=key)
+    cache.save()
+    reloaded = TuneCache(path).get_sell(key)
+    assert reloaded.k_block == tuned.k_block
+    # a pre-k_block document entry loads with the working default
+    legacy = {"c": 16, "sigma": 64, "w_block": 8, "cycles": 1.0,
+              "pad_factor": 1.2, "table": [[16, 64, 1.2, 1.0]]}
+    assert _result_from_json(legacy).k_block == 8

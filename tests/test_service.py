@@ -144,6 +144,21 @@ def test_tunecache_save_requires_path():
         TuneCache().save()
 
 
+def test_tunecache_nonstrict_save_replaces_stale_schema(tmp_path):
+    """A non-strict cache that warned-and-ignored a stale store at load
+    time must be able to replace it at save time — merge-on-save honors
+    the instance's strict mode instead of wedging on the same document."""
+    path = tmp_path / "tune.json"
+    path.write_text(json.dumps(
+        {"schema_version": SCHEMA_VERSION + 1, "entries": {"ghost": {}}}))
+    with pytest.warns(RuntimeWarning, match="ignoring the stale store"):
+        cache = TuneCache(str(path), strict=False)
+    with pytest.warns(RuntimeWarning, match="ignoring the stale store"):
+        cache.save()                           # replaces, never raises
+    fresh = TuneCache(str(path))               # strict load now succeeds
+    assert len(fresh) == 0
+
+
 def test_tunecache_key_distinguishes_machines(small_world, count_measures):
     """The same operand tuned for two machines must occupy two cache
     entries — a hit may never return a layout scored for another machine."""
@@ -507,6 +522,279 @@ def test_pack_tuned_consults_cache(small_world, count_measures):
 
 
 # ---------------------------------------------------------------------------
+# Single-launch coalescing: one batched core call per (op, operand) group
+# ---------------------------------------------------------------------------
+
+
+def test_service_coalesces_spmv_group_into_one_spmm_launch(
+        small_world, monkeypatch):
+    """Five concurrent SpMV requests against one operand become ONE
+    spmm_sell launch (the launch-counter hook), and every column still
+    matches the host reference."""
+    from repro.kernels import sell_core
+
+    csr, graph = small_world
+    reg = make_registry(csr, graph)
+    svc = KernelService(reg, n_slots=8)
+    calls = {"n": 0}
+    real = sell_core.spmm_sell
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(sell_core, "spmm_sell", counting)
+    xs = [RNG.standard_normal(csr.n_cols) for _ in range(5)]
+    rids = [svc.submit("spmv", "mat", x) for x in xs]
+    svc.drain()
+    assert calls["n"] == 1                     # 5 requests, one launch
+    assert svc.stats["launches"] == 1
+    assert reg.get("mat").launches == 1        # the per-operand hook
+    assert svc.stats["coalesced"] >= 5 and svc.stats["max_group"] == 5
+    for rid, x in zip(rids, xs):
+        np.testing.assert_allclose(
+            svc.poll(rid), csr.matvec(x), rtol=1e-10, atol=1e-10)
+
+
+def test_service_coalesces_bfs_sources_into_one_batched_drive(
+        small_world, monkeypatch):
+    from repro.kernels import bfs as bfs_k
+
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=8)
+    calls = {"n": 0}
+    real = bfs_k.bfs_sell
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(bfs_k, "bfs_sell", counting)
+    sources = [0, 3, 11]
+    rids = [svc.submit("bfs", "graph", source=s) for s in sources]
+    svc.drain()
+    assert calls["n"] == 1                     # 3 sources, one batched drive
+    for rid, s in zip(rids, sources):
+        np.testing.assert_array_equal(
+            svc.poll(rid), G.bfs_reference(graph, s))
+
+
+def test_service_coalesces_pagerank_configs_into_one_batched_drive(
+        small_world, monkeypatch):
+    """Requests with DIFFERENT (damping, iters) still coalesce: the configs
+    become iterate columns and freeze at their own iteration budget."""
+    from repro.kernels import pagerank as pr_k
+
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=8)
+    calls = {"n": 0}
+    real = pr_k.pagerank_sell
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pr_k, "pagerank_sell", counting)
+    r1 = svc.submit("pagerank", "graph", iters=4)
+    r2 = svc.submit("pagerank", "graph", iters=7, damping=0.6)
+    svc.drain()
+    assert calls["n"] == 1
+    np.testing.assert_allclose(
+        svc.poll(r1), G.pagerank_reference(graph, iters=4), rtol=1e-8)
+    np.testing.assert_allclose(
+        svc.poll(r2), G.pagerank_reference(graph, damping=0.6, iters=7),
+        rtol=1e-8)
+
+
+def test_service_bad_spmv_payload_excluded_from_batched_launch(small_world):
+    """A wrong-sized x fails alone; its groupmates ride the same batched
+    launch and succeed (the stacking must skip the bad column)."""
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=4)
+    x = RNG.standard_normal(csr.n_cols)
+    bad = svc.submit("spmv", "mat", RNG.standard_normal(csr.n_cols - 1))
+    good = svc.submit("spmv", "mat", x)
+    svc.drain()
+    with pytest.raises(RuntimeError, match="must have shape"):
+        svc.poll(bad)
+    np.testing.assert_allclose(
+        svc.poll(good), csr.matvec(x), rtol=1e-10, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Backpressure + latency accounting
+# ---------------------------------------------------------------------------
+
+
+def test_service_bounded_queue_rejects_with_queue_full(small_world):
+    from repro.service import QueueFull
+
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=2, max_queue=3)
+    xs = [RNG.standard_normal(csr.n_cols) for _ in range(3)]
+    rids = [svc.submit("spmv", "mat", x) for x in xs]
+    with pytest.raises(QueueFull, match="admission queue is full"):
+        svc.submit("spmv", "mat", xs[0])
+    assert svc.stats["rejected"] == 1
+    # stepping drains the queue and re-opens admission
+    svc.step()
+    rids.append(svc.submit("spmv", "mat", xs[0]))
+    svc.drain()
+    assert svc.stats["served"] == 4
+    for rid, x in zip(rids, xs + [xs[0]]):
+        np.testing.assert_allclose(
+            svc.poll(rid), csr.matvec(x), rtol=1e-10, atol=1e-10)
+
+
+def test_service_rejects_zero_capacity_queue(small_world):
+    """max_queue=0 would make every submit raise and the documented
+    reject-then-step retry spin forever — refused at construction."""
+    csr, graph = small_world
+    with pytest.raises(ValueError, match="max_queue must be >= 1"):
+        KernelService(make_registry(csr, graph), n_slots=2, max_queue=0)
+
+
+def test_service_latency_percentiles_cover_retired_requests(small_world):
+    csr, graph = small_world
+    svc = KernelService(make_registry(csr, graph), n_slots=4)
+    assert svc.latency_percentiles() == {
+        "p50_us": 0.0, "p95_us": 0.0, "p99_us": 0.0}
+    for _ in range(6):
+        svc.submit("spmv", "mat", RNG.standard_normal(csr.n_cols))
+    svc.drain()
+    pct = svc.latency_percentiles()
+    assert 0 < pct["p50_us"] <= pct["p95_us"] <= pct["p99_us"]
+
+
+# ---------------------------------------------------------------------------
+# Cross-process TuneCache sharing (advisory file lock + merge-on-save)
+# ---------------------------------------------------------------------------
+
+
+_WRITER_SCRIPT = """
+import sys
+from repro.core.autotune import SellTuneResult
+from repro.service.tunecache import TuneCache
+
+path, worker, n_entries = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+cache = TuneCache(path)
+for i in range(n_entries):
+    cache.put_sell(
+        f"spmv|cpu|float64|m|w{worker}e{i}",
+        SellTuneResult(c=8, sigma=64, w_block=8, cycles=1.0,
+                       pad_factor=1.0, table=((8, 64, 1.0, 1.0),)))
+    cache.save()
+"""
+
+
+def test_tunecache_two_concurrent_writers_lose_nothing(tmp_path):
+    """Two processes hammering save() on one cache file must union their
+    entries — the advisory lock serializes the load-merge-write section.
+    Fresh subprocesses (not fork: the JAX-initialized test process is
+    multithreaded, and forking it risks deadlock) whose import graph never
+    touches jax."""
+    import os
+    import subprocess
+    import sys
+
+    import repro
+
+    # repro is a src-layout (possibly namespace) package: locate src/ from
+    # its package path, not __file__ (None for namespace packages)
+    src_dir = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    path = str(tmp_path / "shared.json")
+    n = 12
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", _WRITER_SCRIPT, path, str(w), str(n)],
+            env={**os.environ,
+                 "PYTHONPATH": os.pathsep.join(
+                     p for p in (src_dir, os.environ.get("PYTHONPATH")) if p)})
+        for w in range(2)
+    ]
+    for p in procs:
+        assert p.wait(timeout=120) == 0
+    merged = TuneCache(path)
+    assert len(merged) == 2 * n                # no lost writes
+    for w in range(2):
+        for i in range(n):
+            assert merged.get_sell(f"spmv|cpu|float64|m|w{w}e{i}") is not None
+
+
+def test_tunecache_interleaved_saves_merge_instead_of_clobbering(tmp_path):
+    """The single-process shape of the same guarantee: two instances that
+    loaded the same (empty) file and save different entries both survive."""
+    from repro.core.autotune import SellTuneResult
+
+    path = str(tmp_path / "tune.json")
+    res = SellTuneResult(c=8, sigma=64, w_block=8, cycles=1.0,
+                         pad_factor=1.0, table=((8, 64, 1.0, 1.0),))
+    a, b = TuneCache(path), TuneCache(path)
+    a.put_sell("spmv|cpu|float64|m|A", res, source="a")
+    a.save()
+    b.put_sell("spmv|cpu|float64|m|B", res, source="b")
+    b.save()                                   # must fold A's entry in
+    merged = TuneCache(path)
+    assert len(merged) == 2
+    # hints merge too; repack counts are event tallies, so two workers
+    # each observing one event total two
+    a.set_hint("spmv", "m1", 64)
+    a.note_repack("r")
+    a.save()
+    b.note_repack("r")
+    b.save()
+    merged = TuneCache(path)
+    assert merged.hint_vl("spmv", "m1") == 64
+    assert merged.repacks["r"] == 2
+
+
+def test_tunecache_save_does_not_revert_keys_it_only_loaded(tmp_path):
+    """Merge-on-save overlays only keys THIS instance wrote: a worker that
+    loaded a key and then saves unrelated work must not roll back another
+    worker's newer value for it."""
+    from repro.core.autotune import SellTuneResult
+
+    path = str(tmp_path / "tune.json")
+    res = SellTuneResult(c=8, sigma=64, w_block=8, cycles=1.0,
+                         pad_factor=1.0, table=((8, 64, 1.0, 1.0),))
+    seed = TuneCache(path)
+    seed.set_hint("spmv", "m1", 64)
+    seed.save()
+    stale = TuneCache(path)                    # loads h=64, never writes it
+    fresh = TuneCache(path)
+    fresh.set_hint("spmv", "m1", 128)          # another worker updates it
+    fresh.save()
+    stale.put_sell("spmv|cpu|float64|m|X", res)
+    stale.save()                               # unrelated write
+    merged = TuneCache(path)
+    assert merged.hint_vl("spmv", "m1") == 128  # newer value survived
+    assert merged.get_sell("spmv|cpu|float64|m|X") is not None
+
+
+def test_tunecache_hit_counters_accumulate_across_workers(tmp_path):
+    """The persisted per-entry 'hits' tally sums concurrent workers'
+    increments instead of one worker's save reverting the other's."""
+    from repro.core.autotune import SellTuneResult
+
+    path = str(tmp_path / "tune.json")
+    key = "spmv|cpu|float64|m|K"
+    res = SellTuneResult(c=8, sigma=64, w_block=8, cycles=1.0,
+                         pad_factor=1.0, table=((8, 64, 1.0, 1.0),))
+    seed = TuneCache(path)
+    seed.put_sell(key, res)
+    seed.save()
+    a, b = TuneCache(path), TuneCache(path)
+    for _ in range(2):
+        a.get_sell(key)
+    for _ in range(3):
+        b.get_sell(key)
+    a.save()
+    b.save()
+    merged = TuneCache(path)
+    assert merged._entries[key]["hits"] == 5
+
+
+# ---------------------------------------------------------------------------
 # bench_service smoke (tiny): the CI artifact shape
 # ---------------------------------------------------------------------------
 
@@ -518,7 +806,16 @@ def test_bench_service_emits_load_levels_and_tune_rows():
     table = bench_service.bench_load(loads=(2, 4, 6), n_slots=4,
                                      with_bfs=False)
     assert sorted(table) == [
-        "service_load_2", "service_load_4", "service_load_6"]
+        "service_load_2", "service_load_4", "service_load_6",
+        "service_load_6_uncoalesced"]
     for entry in table.values():
         assert entry["served"] == entry["offered"]
         assert entry["us_per_call"] > 0 and entry["throughput_rps"] > 0
+        # the latency/backpressure/launch fields the CI gate tracks
+        assert 0 < entry["p50_us"] <= entry["p95_us"] <= entry["p99_us"]
+        assert entry["rejected"] == 0          # tiny loads never backpressure
+        assert 0 < entry["launches"] <= entry["groups"]
+    # the headline is self-contained: the top level records its speedup
+    # over the 1-wide uncoalesced counterfactual measured in the same run
+    assert table["service_load_6"]["coalescing_speedup"] > 0
+    assert table["service_load_6_uncoalesced"]["launches"] == 6
