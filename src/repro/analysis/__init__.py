@@ -1,0 +1,42 @@
+"""Static analysis for the kernel stack: launch-contract preflight + lint.
+
+Two engines behind one CLI (``python -m repro.analysis``):
+
+* **launch-plan preflight** (:mod:`repro.analysis.preflight`) — derive a
+  static :class:`LaunchPlan` (grid, block shapes, dtype flow, per-cell VMEM
+  footprint) for every Pallas entry point from operand metadata alone, and
+  validate the launch contracts before XLA ever sees the operand;
+* **AST lint** (:mod:`repro.analysis.lint` + :mod:`repro.analysis.rules`) —
+  repo-specific source rules (compat discipline, TuneCache lock discipline,
+  async hygiene, kernel purity, VMEM-budget literals).
+"""
+from repro.analysis.launchplan import (
+    BlockPlan,
+    LaunchPlan,
+    LaunchPlanError,
+    is_pow2,
+)
+from repro.analysis.lint import Finding, Rule, lint_file, lint_paths
+from repro.analysis.preflight import (
+    SlabMeta,
+    plan_bfs_sell,
+    plan_fft_stockham,
+    plan_pagerank_sell,
+    plan_spmm_sell,
+)
+
+__all__ = [
+    "BlockPlan",
+    "Finding",
+    "LaunchPlan",
+    "LaunchPlanError",
+    "Rule",
+    "SlabMeta",
+    "is_pow2",
+    "lint_file",
+    "lint_paths",
+    "plan_bfs_sell",
+    "plan_fft_stockham",
+    "plan_pagerank_sell",
+    "plan_spmm_sell",
+]

@@ -1,0 +1,138 @@
+"""Static launch plans: what a Pallas launch will ask of the machine.
+
+Engine 1 of :mod:`repro.analysis`.  A :class:`LaunchPlan` is everything XLA
+would have to know before compiling a kernel launch — grid dims, per-operand
+block shapes, dtype flow, per-grid-cell VMEM footprint — derived from operand
+*metadata* alone, without tracing or executing anything.  The plan carries
+its own contract verdict: builders in :mod:`repro.analysis.preflight` record
+every violated launch contract (VMEM budget, pow2 padding invariants,
+column-index bounds, dtype consistency) in :attr:`LaunchPlan.violations`,
+and :meth:`LaunchPlan.raise_if_invalid` turns a non-empty verdict into a
+structured :class:`LaunchPlanError` — the admission-time rejection the
+serving path uses instead of an opaque XLA compile error or OOM.
+
+The VMEM budget is the single source of truth in
+:data:`repro.core.autotune.VMEM_BUDGET_BYTES`; nothing here redefines it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.autotune import VMEM_BUDGET_BYTES
+
+__all__ = [
+    "BlockPlan",
+    "LaunchPlan",
+    "LaunchPlanError",
+    "VMEM_BUDGET_BYTES",
+    "is_pow2",
+]
+
+
+def is_pow2(x: int) -> bool:
+    """True for positive powers of two (the padding invariant of the SELL
+    bucket widths and the tuned w_block/k_block tiles)."""
+    return x >= 1 and (x & (x - 1)) == 0
+
+
+class LaunchPlanError(ValueError):
+    """A launch contract would be violated; the launch must not happen.
+
+    Structured so callers can log/aggregate without parsing the message:
+    ``kernel`` names the entry point, ``violations`` lists every broken
+    contract, ``plan`` (when available) is the full offending plan.
+    """
+
+    def __init__(self, kernel: str, violations, plan: "LaunchPlan | None" = None):
+        self.kernel = kernel
+        self.violations = tuple(violations)
+        self.plan = plan
+        super().__init__(
+            f"launch preflight failed for {kernel}: "
+            + "; ".join(self.violations)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """One ``pallas_call`` of the launch set (one SELL bucket, or the whole
+    launch for single-call kernels): its grid, the block shape and dtype of
+    every operand one grid cell touches, and the cell's VMEM footprint."""
+
+    label: str                                  # e.g. "bucket0[W=8]"
+    grid: tuple[int, ...]
+    blocks: tuple[tuple[str, tuple[int, ...], str], ...]  # (name, shape, dtype)
+    vmem_bytes: int
+
+    @property
+    def grid_cells(self) -> int:
+        return math.prod(self.grid) if self.grid else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchPlan:
+    """Static description of one kernel launch set, with contract verdict."""
+
+    kernel: str                 # spmm_sell | bfs_sell | pagerank_sell | fft_stockham
+    operand: str                # short human description of the operand
+    dtype: str                  # value/compute dtype flowing through the kernel
+    vmem_budget: int
+    blocks: tuple[BlockPlan, ...]
+    violations: tuple[str, ...] = ()
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    @property
+    def n_launches(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def grid_cells(self) -> int:
+        return sum(b.grid_cells for b in self.blocks)
+
+    @property
+    def peak_vmem_bytes(self) -> int:
+        return max((b.vmem_bytes for b in self.blocks), default=0)
+
+    def raise_if_invalid(self) -> "LaunchPlan":
+        """Return self when every contract holds; raise otherwise."""
+        if self.violations:
+            raise LaunchPlanError(self.kernel, self.violations, plan=self)
+        return self
+
+    def summary(self) -> dict:
+        """JSON-able observability record (what the service exposes)."""
+        return {
+            "kernel": self.kernel,
+            "operand": self.operand,
+            "dtype": self.dtype,
+            "ok": self.ok,
+            "n_launches": self.n_launches,
+            "grid_cells": self.grid_cells,
+            "peak_vmem_bytes": self.peak_vmem_bytes,
+            "vmem_budget": self.vmem_budget,
+            "violations": list(self.violations),
+        }
+
+    def table(self) -> str:
+        """Human-readable plan, one row per pallas_call."""
+        lines = [
+            f"{self.kernel} on {self.operand} [{self.dtype}] — "
+            f"{self.n_launches} launch(es), {self.grid_cells} grid cells, "
+            f"peak {self.peak_vmem_bytes / 2**20:.2f} MiB of "
+            f"{self.vmem_budget / 2**20:.0f} MiB VMEM"
+        ]
+        for b in self.blocks:
+            shapes = ", ".join(
+                f"{name}{list(shape)}:{dt}" for name, shape, dt in b.blocks
+            )
+            lines.append(
+                f"  {b.label}: grid={list(b.grid)} "
+                f"vmem={b.vmem_bytes / 2**20:.2f} MiB  {shapes}"
+            )
+        for v in self.violations:
+            lines.append(f"  VIOLATION: {v}")
+        return "\n".join(lines)

@@ -1,0 +1,192 @@
+"""AST lint engine with per-file and per-line suppressions (engine 2).
+
+Pure stdlib (``ast`` + ``tokenize``): linting the tree must not require the
+numeric stack, so the CI gate stays fast and the engine can never be broken
+by the code it checks.  Rules live in :mod:`repro.analysis.rules`; this
+module owns the mechanics — file discovery, parsing, suppression comments,
+and the strict-mode extras.
+
+Suppression syntax (documented in the README rule table):
+
+* ``# lint-ok: rule-name`` on (or inside the expression of) an offending
+  line suppresses that rule for that line;
+* a ``# lint-ok-file: rule-name`` comment anywhere in the file suppresses
+  the rule for the whole file.
+
+Multiple rules separate with commas: ``# lint-ok: rule-a, rule-b``.  In
+strict mode (the nightly gate) a suppression that suppressed nothing is
+itself a finding — stale escapes don't accumulate.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import tokenize
+from typing import Iterable, Sequence
+
+__all__ = [
+    "DEFAULT_EXCLUDE",
+    "Finding",
+    "Rule",
+    "iter_python_files",
+    "lint_file",
+    "lint_paths",
+]
+
+#: Directory basenames never walked into: the known-bad fixture corpus
+#: (tests/fixtures/badcode — linted explicitly by its own tests), caches.
+DEFAULT_EXCLUDE = ("badcode", "__pycache__", ".git")
+
+_LINE_TAG = "lint-ok:"
+_FILE_TAG = "lint-ok-file:"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+    severity: str = "error"        # "error" fails the gate; "warn" only in strict
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class Rule:
+    """One lint rule: a name, a path predicate, and an AST check.
+
+    Subclasses set ``name``/``description`` and implement :meth:`check`;
+    :meth:`applies` scopes the rule (e.g. compat discipline exempts the
+    compat package itself).
+    """
+
+    name = "unnamed-rule"
+    description = ""
+    severity = "error"
+
+    def applies(self, path: str) -> bool:
+        return True
+
+    def check(self, tree: ast.AST, path: str) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, path: str, node: ast.AST, message: str) -> Finding:
+        return Finding(path=path, line=getattr(node, "lineno", 0),
+                       rule=self.name, message=message,
+                       severity=self.severity)
+
+
+def _parse_suppressions(source: str) -> tuple[set, dict]:
+    """(file-level rule names, {line: rule names}) from lint-ok comments."""
+    file_level: set[str] = set()
+    by_line: dict[int, set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            text = tok.string.lstrip("#").strip()
+            if text.startswith(_FILE_TAG):
+                names = text[len(_FILE_TAG):]
+                file_level.update(n.strip() for n in names.split(",") if n.strip())
+            elif text.startswith(_LINE_TAG):
+                names = text[len(_LINE_TAG):]
+                by_line.setdefault(tok.start[0], set()).update(
+                    n.strip() for n in names.split(",") if n.strip())
+    except tokenize.TokenError:
+        pass                        # unparseable tail: ast.parse will report
+    return file_level, by_line
+
+
+def iter_python_files(
+    paths: Iterable[str | os.PathLike],
+    exclude: Sequence[str] = DEFAULT_EXCLUDE,
+) -> list[str]:
+    """Every .py file under ``paths``, in stable order.
+
+    Directories are walked recursively, skipping any directory whose
+    basename is in ``exclude``; a path given explicitly as a *file* is
+    always included (this is how the fixture tests lint the known-bad
+    corpus that the default walk refuses to enter).
+    """
+    out: list[str] = []
+    for p in paths:
+        p = os.fspath(p)
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames if d not in exclude)
+            out.extend(os.path.join(dirpath, f)
+                       for f in sorted(filenames) if f.endswith(".py"))
+    return out
+
+
+def lint_file(path: str, rules: Sequence[Rule],
+              strict: bool = False) -> list[Finding]:
+    """Run ``rules`` over one file, honoring its suppression comments."""
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Finding(path=path, line=exc.lineno or 0, rule="syntax-error",
+                        message=f"file does not parse: {exc.msg}")]
+    file_sup, line_sup = _parse_suppressions(source)
+    findings: list[Finding] = []
+    used_file: set[str] = set()
+    used_line: set[tuple[int, str]] = set()
+    for rule in rules:
+        if not rule.applies(path):
+            continue
+        for f in rule.check(tree, path):
+            if rule.name in file_sup:
+                used_file.add(rule.name)
+                continue
+            if rule.name in line_sup.get(f.line, ()):
+                used_line.add((f.line, rule.name))
+                continue
+            findings.append(f)
+    if strict:
+        checked = {r.name for r in rules if r.applies(path)}
+        for name in sorted((file_sup & checked) - used_file):
+            findings.append(Finding(
+                path=path, line=1, rule="unused-suppression",
+                message=f"file-level 'lint-ok-file: {name}' suppresses "
+                        "nothing — remove it"))
+        for line, names in sorted(line_sup.items()):
+            for name in sorted(names & checked):
+                if (line, name) not in used_line:
+                    findings.append(Finding(
+                        path=path, line=line, rule="unused-suppression",
+                        message=f"'lint-ok: {name}' suppresses nothing — "
+                                "remove it"))
+    return findings
+
+
+def lint_paths(
+    paths: Iterable[str | os.PathLike],
+    rules: Sequence[Rule | str] | None = None,
+    strict: bool = False,
+    exclude: Sequence[str] = DEFAULT_EXCLUDE,
+) -> list[Finding]:
+    """Run the rule set over every .py file under ``paths``.
+
+    ``rules`` may mix :class:`Rule` instances and rule names (resolved
+    against the shipped registry); None runs every shipped rule.  Findings
+    with severity "warn" are dropped unless ``strict``.
+    """
+    from repro.analysis.rules import resolve_rules
+
+    resolved = resolve_rules(rules)
+    findings: list[Finding] = []
+    for path in iter_python_files(paths, exclude=exclude):
+        findings.extend(lint_file(path, resolved, strict=strict))
+    if not strict:
+        findings = [f for f in findings if f.severity == "error"]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

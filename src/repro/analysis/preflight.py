@@ -1,0 +1,330 @@
+"""Launch-plan builders for every Pallas entry point (engine 1).
+
+Each ``plan_*`` function mirrors the launch arithmetic of its kernel wrapper
+(:func:`repro.kernels.sell_core.spmm_sell`,
+:func:`repro.kernels.sell_core.bucketed_node_step` as driven by the BFS /
+PageRank kernels, :func:`repro.kernels.fft.fft_stockham`) without importing
+or executing any of them: the grid dims, block shapes and per-cell VMEM
+footprints are derived from operand *metadata* (:class:`SlabMeta`) and the
+tuned tile sizes alone.  The footprint model matches the one
+:func:`repro.core.autotune.pick_k_block` / ``pick_w_block`` greedily fill —
+VMEM-resident RHS block plus double-buffered streamed slab tile plus output
+tile — so a plan that violates the budget means the tuner's heuristic (or a
+stale cached tune, or a hand-passed block shape) has drifted out of the
+modeled envelope and the launch must be rejected *before* XLA sees it.
+
+Checked contracts:
+
+* per-cell VMEM footprint <= ``vmem_budget`` (default: the single source of
+  truth :data:`repro.core.autotune.VMEM_BUDGET_BYTES`);
+* pow2 padding invariants: requested ``w_block``/``k_block`` and every
+  packed bucket width must be powers of two;
+* column/adjacency index bounds: every stored index in [PAD, n_cols)
+  (``SlabMeta.from_slabs(check_bounds=True)`` scans once, at registration);
+* dtype flow: slab buckets agree with each other and with the RHS; indices
+  are int32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.analysis.launchplan import (
+    VMEM_BUDGET_BYTES,
+    BlockPlan,
+    LaunchPlan,
+    is_pow2,
+)
+from repro.sparse.formats import PAD, pow2_ceil
+
+__all__ = [
+    "SlabMeta",
+    "plan_bfs_sell",
+    "plan_fft_stockham",
+    "plan_pagerank_sell",
+    "plan_spmm_sell",
+]
+
+_IDX_BYTES = 4                       # int32 column / adjacency indices
+
+
+def _dtype_bytes(dtype: str) -> int:
+    return int(np.dtype(dtype).itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabMeta:
+    """The launch-relevant metadata of a packed SELL operand.
+
+    Cheap to extract (O(n_buckets) shape reads; the optional index-bounds
+    scan is one vectorized min/max over the stored indices, done once at
+    registration, never per request).  Works for both slab containers:
+    matrix :class:`repro.sparse.formats.SellSlabs` (buckets (S, W, C)) and
+    graph :class:`repro.graphs.gen.SellGraphSlabs` (buckets (S, C, W)).
+    """
+
+    kind: str                       # "matrix" | "graph"
+    c: int
+    widths: tuple[int, ...]         # padded W per bucket
+    n_slices: tuple[int, ...]       # slices per bucket
+    n_rows: int                     # rows / nodes
+    n_cols: int                     # RHS length (n_cols / n_nodes)
+    val_dtype: str | None           # None for graphs (index-only slabs)
+    idx_dtype: str
+    idx_min: int | None = None      # None = bounds not scanned
+    idx_max: int | None = None
+
+    @classmethod
+    def from_slabs(cls, slabs, check_bounds: bool = False) -> "SlabMeta":
+        """Extract metadata from SellSlabs or SellGraphSlabs (duck-typed)."""
+        if hasattr(slabs, "bucket_cols"):       # matrix slabs: (S, W, C)
+            idx_arrays = slabs.bucket_cols
+            widths = tuple(int(a.shape[1]) for a in idx_arrays)
+            c = int(idx_arrays[0].shape[2]) if idx_arrays else 0
+            kind, n_rows, n_cols = "matrix", slabs.n_rows, slabs.n_cols
+            val_dtype = str(slabs.bucket_vals[0].dtype) if slabs.bucket_vals \
+                else None
+        elif hasattr(slabs, "bucket_adj"):      # graph slabs: (S, C, W)
+            idx_arrays = slabs.bucket_adj
+            widths = tuple(int(a.shape[2]) for a in idx_arrays)
+            c = int(idx_arrays[0].shape[1]) if idx_arrays else 0
+            kind, n_rows, n_cols = "graph", slabs.n_nodes, slabs.n_nodes
+            val_dtype = None
+        else:
+            raise TypeError(
+                f"expected SellSlabs or SellGraphSlabs, got "
+                f"{type(slabs).__name__}")
+        idx_min = idx_max = None
+        if check_bounds and idx_arrays:
+            idx_min = min(int(np.min(a)) for a in idx_arrays if a.size)
+            idx_max = max(int(np.max(a)) for a in idx_arrays if a.size)
+        return cls(
+            kind=kind, c=c, widths=widths,
+            n_slices=tuple(int(a.shape[0]) for a in idx_arrays),
+            n_rows=int(n_rows), n_cols=int(n_cols), val_dtype=val_dtype,
+            idx_dtype=str(idx_arrays[0].dtype) if idx_arrays else "int32",
+            idx_min=idx_min, idx_max=idx_max,
+        )
+
+    def describe(self) -> str:
+        return (f"{self.kind} {self.n_rows}x{self.n_cols} "
+                f"C={self.c} buckets={list(self.widths)}")
+
+
+def _shared_slab_contracts(meta: SlabMeta, violations: list[str]) -> None:
+    """Contracts every SELL launch shares: bucket pow2 widths, index dtype
+    and (when scanned) index bounds."""
+    for i, w in enumerate(meta.widths):
+        if not is_pow2(w):
+            violations.append(
+                f"bucket {i} width {w} is not a power of two (packer "
+                "invariant broken)")
+    if meta.idx_dtype != "int32":
+        violations.append(
+            f"index dtype {meta.idx_dtype} != int32 (kernel gather contract)")
+    if meta.idx_max is not None and meta.idx_max >= meta.n_cols:
+        violations.append(
+            f"stored index {meta.idx_max} out of bounds for n_cols="
+            f"{meta.n_cols} (gather would clamp and return garbage)")
+    if meta.idx_min is not None and meta.idx_min < PAD:
+        violations.append(
+            f"stored index {meta.idx_min} below the PAD sentinel ({PAD})")
+
+
+def plan_spmm_sell(
+    meta: SlabMeta,
+    k: int = 1,
+    x_dtype: str | None = None,
+    *,
+    w_block: int = 8,
+    k_block: int = 8,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> LaunchPlan:
+    """Plan ``spmm_sell`` for a (n_cols, k) RHS stack against these slabs.
+
+    Mirrors the wrapper's tiling: per bucket the W axis is padded to a
+    multiple of ``min(w_block, W)`` and the k axis to a multiple of
+    ``min(k_block, pow2_ceil(k))``; one grid cell holds the double-buffered
+    (w_eff, C) cols+vals tiles, the VMEM-resident (n_cols, k_tile) RHS
+    block, and the (C, k_tile) output tile.
+    """
+    violations: list[str] = []
+    if not is_pow2(w_block):
+        violations.append(f"w_block {w_block} is not a power of two")
+    if not is_pow2(k_block):
+        violations.append(f"k_block {k_block} is not a power of two")
+    if k < 1:
+        violations.append(f"RHS stack must have k >= 1 columns, got {k}")
+    _shared_slab_contracts(meta, violations)
+    val_dtype = meta.val_dtype or "float64"
+    vb = _dtype_bytes(val_dtype)
+    if x_dtype is not None:
+        if not np.issubdtype(np.dtype(x_dtype), np.floating):
+            violations.append(f"RHS dtype {x_dtype} is not floating")
+        elif meta.val_dtype is not None and x_dtype != meta.val_dtype:
+            violations.append(
+                f"RHS dtype {x_dtype} != slab value dtype {meta.val_dtype}")
+    k_tile = min(max(int(k_block), 1), pow2_ceil(max(k, 1)))
+    k_pad = k_tile * math.ceil(max(k, 1) / k_tile)
+    xb = _dtype_bytes(x_dtype) if x_dtype is not None else vb
+    blocks = []
+    for i, (s, w) in enumerate(zip(meta.n_slices, meta.widths)):
+        w_eff = min(max(int(w_block), 1), w)
+        w_pad = w_eff * math.ceil(w / w_eff)
+        grid = (s, k_pad // k_tile, w_pad // w_eff)
+        footprint = (
+            2 * w_eff * meta.c * (vb + _IDX_BYTES)   # double-buffered slab tile
+            + meta.n_cols * k_tile * xb              # VMEM-resident RHS block
+            + meta.c * k_tile * vb                   # output tile
+        )
+        if footprint > vmem_budget:
+            violations.append(
+                f"bucket {i} (W={w}): per-cell footprint {footprint} B "
+                f"exceeds VMEM budget {vmem_budget} B "
+                f"(w_block={w_block}, k_block={k_block})")
+        blocks.append(BlockPlan(
+            label=f"bucket{i}[W={w}]",
+            grid=grid,
+            blocks=(
+                ("cols", (1, w_eff, meta.c), meta.idx_dtype),
+                ("vals", (1, w_eff, meta.c), val_dtype),
+                ("x", (meta.n_cols, k_tile), x_dtype or val_dtype),
+                ("y", (1, meta.c, k_tile), val_dtype),
+            ),
+            vmem_bytes=footprint,
+        ))
+    return LaunchPlan(
+        kernel="spmm_sell", operand=meta.describe(), dtype=val_dtype,
+        vmem_budget=int(vmem_budget), blocks=tuple(blocks),
+        violations=tuple(violations),
+    )
+
+
+def _plan_node_step(
+    kernel: str,
+    meta: SlabMeta,
+    k: int,
+    state_dtype: str,
+    resident_bytes: int,
+    vmem_budget: int,
+) -> LaunchPlan:
+    """Shared plan for the ``bucketed_node_step`` drivers (BFS, PageRank):
+    per bucket one (1, C, W) adjacency tile (double-buffered), the whole
+    resident state, and a (1, C[, k]) output tile."""
+    violations: list[str] = []
+    if k < 1:
+        violations.append(f"state stack must have k >= 1 columns, got {k}")
+    _shared_slab_contracts(meta, violations)
+    sb = _dtype_bytes(state_dtype)
+    blocks = []
+    for i, (s, w) in enumerate(zip(meta.n_slices, meta.widths)):
+        out_tile = (1, meta.c) if k == 1 else (1, meta.c, k)
+        footprint = (
+            2 * meta.c * w * _IDX_BYTES              # double-buffered adj tile
+            + resident_bytes                         # state columns, whole
+            + meta.c * max(k, 1) * sb                # output tile
+        )
+        if footprint > vmem_budget:
+            violations.append(
+                f"bucket {i} (W={w}): per-cell footprint {footprint} B "
+                f"exceeds VMEM budget {vmem_budget} B (k={k})")
+        blocks.append(BlockPlan(
+            label=f"bucket{i}[W={w}]",
+            grid=(s,),
+            blocks=(
+                ("adj", (1, meta.c, w), meta.idx_dtype),
+                ("state", (meta.n_rows + 1,) if k == 1
+                 else (meta.n_rows + 1, k), state_dtype),
+                ("out", out_tile, state_dtype),
+            ),
+            vmem_bytes=footprint,
+        ))
+    return LaunchPlan(
+        kernel=kernel, operand=meta.describe(), dtype=state_dtype,
+        vmem_budget=int(vmem_budget), blocks=tuple(blocks),
+        violations=tuple(violations),
+    )
+
+
+def plan_bfs_sell(
+    meta: SlabMeta,
+    k: int = 1,
+    *,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> LaunchPlan:
+    """Plan one ``bfs_step_sell`` level for k stacked sources.
+
+    Resident state: the (n + 1[, k]) int32 distance columns plus the (1,)
+    level scalar.
+    """
+    resident = (meta.n_rows + 1) * max(k, 1) * 4 + 4
+    return _plan_node_step(
+        "bfs_sell", meta, k, "int32", resident, vmem_budget)
+
+
+def plan_pagerank_sell(
+    meta: SlabMeta,
+    k: int = 1,
+    dtype: str = "float64",
+    *,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> LaunchPlan:
+    """Plan one ``pagerank_step_sell`` power step for k stacked configs.
+
+    Resident state: the (n + 1[, k]) contribution columns plus the (3[, k])
+    constants, in the rank dtype.
+    """
+    b = _dtype_bytes(dtype)
+    resident = ((meta.n_rows + 1) + 3) * max(k, 1) * b
+    return _plan_node_step(
+        "pagerank_sell", meta, k, dtype, resident, vmem_budget)
+
+
+def plan_fft_stockham(
+    n: int,
+    batch: int = 1,
+    *,
+    b_block: int = 8,
+    dtype: str = "float64",
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> LaunchPlan:
+    """Plan ``fft_stockham`` for a (batch, n) split-plane signal block.
+
+    One grid cell holds four (b_block, n) planes (re/im in and out) plus the
+    whole (stages, n/2) x 2 twiddle table.
+    """
+    violations: list[str] = []
+    if n < 2 or not is_pow2(n):
+        violations.append(f"fft length {n} is not a power of two >= 2")
+    if b_block < 1:
+        violations.append(f"b_block must be >= 1, got {b_block}")
+    if batch < 1:
+        violations.append(f"batch must be >= 1, got {batch}")
+    b = _dtype_bytes(dtype)
+    bb = max(int(b_block), 1)
+    stages = int(math.log2(n)) if n >= 2 and is_pow2(n) else 0
+    footprint = 4 * bb * n * b + 2 * stages * (n // 2) * b
+    if footprint > vmem_budget:
+        violations.append(
+            f"per-cell footprint {footprint} B exceeds VMEM budget "
+            f"{vmem_budget} B (n={n}, b_block={b_block})")
+    grid = (math.ceil(max(batch, 1) / bb),)
+    plan = LaunchPlan(
+        kernel="fft_stockham", operand=f"fft n={n} batch={batch}",
+        dtype=dtype, vmem_budget=int(vmem_budget),
+        blocks=(BlockPlan(
+            label="stockham",
+            grid=grid,
+            blocks=(
+                ("re", (bb, n), dtype), ("im", (bb, n), dtype),
+                ("wre", (stages, n // 2), dtype),
+                ("wim", (stages, n // 2), dtype),
+                ("out_re", (bb, n), dtype), ("out_im", (bb, n), dtype),
+            ),
+            vmem_bytes=footprint,
+        ),),
+        violations=tuple(violations),
+    )
+    return plan

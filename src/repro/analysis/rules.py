@@ -1,0 +1,369 @@
+"""The repo-specific lint rules (engine 2 of :mod:`repro.analysis`).
+
+Five rules, each encoding a discipline this codebase already relies on but
+previously enforced only by convention (or, for compat discipline, by a
+regex scan inside one test):
+
+* ``compat-discipline`` — the version-sensitive JAX sharding APIs that
+  :mod:`repro.compat` wraps must never be called directly;
+* ``tunecache-lock-discipline`` — in modules that participate in the
+  TuneCache lock protocol, every persisted write flows through the
+  ``_file_lock`` / ``_locked`` context manager;
+* ``async-hygiene`` — no blocking file IO or ``time.sleep`` inside
+  ``async def`` bodies (the serving path must never stall its event loop);
+* ``kernel-purity`` — Pallas kernel bodies are pure array programs: no
+  host-side randomness, IO, printing or clock reads;
+* ``vmem-budget-literal`` — the VMEM budget has one source of truth
+  (:data:`repro.core.autotune.VMEM_BUDGET_BYTES`); spelling its value as a
+  literal anywhere else is a fork waiting to drift.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.lint import Finding, Rule
+
+__all__ = ["ALL_RULES", "resolve_rules", "rule_names"]
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """`a.b.c` attribute chain as a dotted string, or None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class CompatDiscipline(Rule):
+    """Forbidden new-jax-only APIs outside repro.compat.
+
+    The promotion of the regex scan that used to live in
+    ``tests/test_compat.py``: AST-based, so mentions inside strings and
+    comments (like this docstring) can never false-positive, and per-file
+    suppressions work.
+    """
+
+    name = "compat-discipline"
+    description = ("version-sensitive jax sharding APIs must go through "
+                   "repro.compat")
+
+    #: forbidden dotted name -> the compat replacement to point at
+    FORBIDDEN = {
+        "jax.sharding.get_abstract_mesh": "repro.compat.current_mesh_context",
+        "jax.sharding.AxisType": "repro.compat.make_mesh",
+        "jax.set_mesh": "repro.compat.use_mesh",
+        "jax.make_mesh": "repro.compat.make_mesh",
+    }
+
+    def applies(self, path: str) -> bool:
+        return os.sep + "compat" + os.sep not in os.path.abspath(path)
+
+    def check(self, tree: ast.AST, path: str) -> list[Finding]:
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute):
+                name = _dotted(node)
+                if name in self.FORBIDDEN:
+                    out.append(self.finding(
+                        path, node,
+                        f"direct use of {name}; use "
+                        f"{self.FORBIDDEN[name]} instead"))
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    full = f"{node.module}.{alias.name}"
+                    if full in self.FORBIDDEN:
+                        out.append(self.finding(
+                            path, node,
+                            f"import of {full}; use "
+                            f"{self.FORBIDDEN[full]} instead"))
+        return out
+
+
+_LOCK_NAMES = frozenset({"_file_lock", "_locked"})
+_PERSIST_CALLS = frozenset({"atomic_write_json"})
+
+
+class TuneCacheLockDiscipline(Rule):
+    """Persisted writes must sit inside the advisory-lock critical section.
+
+    Scoped by participation, not by filename: the rule activates in any
+    module that defines or imports ``_file_lock`` / ``_locked`` (i.e. that
+    takes part in the cross-process TuneCache protocol), and flags calls to
+    the persistence primitives made outside a ``with _file_lock(...)`` /
+    ``with self._locked(...)`` block — the load-merge-write race that the
+    lock exists to serialize.
+    """
+
+    name = "tunecache-lock-discipline"
+    description = ("persisted cache writes must run under the "
+                   "_file_lock/_locked context manager")
+
+    @staticmethod
+    def _is_lock_ctx(expr: ast.AST) -> bool:
+        if not isinstance(expr, ast.Call):
+            return False
+        func = expr.func
+        if isinstance(func, ast.Name):
+            return func.id in _LOCK_NAMES
+        if isinstance(func, ast.Attribute):
+            return func.attr in _LOCK_NAMES
+        return False
+
+    def check(self, tree: ast.AST, path: str) -> list[Finding]:
+        participates = False
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in _LOCK_NAMES:
+                participates = True
+            elif isinstance(node, ast.ImportFrom):
+                if any(a.name in _LOCK_NAMES for a in node.names):
+                    participates = True
+        if not participates:
+            return []
+        out: list[Finding] = []
+
+        def visit(node: ast.AST, locked: bool) -> None:
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                inside = locked or any(
+                    self._is_lock_ctx(item.context_expr)
+                    for item in node.items)
+                for child in node.body:
+                    visit(child, inside)
+                return
+            if isinstance(node, ast.Call):
+                name = None
+                if isinstance(node.func, ast.Name):
+                    name = node.func.id
+                elif isinstance(node.func, ast.Attribute):
+                    name = node.func.attr
+                if name in _PERSIST_CALLS and not locked:
+                    out.append(self.finding(
+                        path, node,
+                        f"{name}() outside the _file_lock/_locked critical "
+                        "section: concurrent workers can interleave "
+                        "load-merge-write"))
+            for child in ast.iter_child_nodes(node):
+                visit(child, locked)
+
+        visit(tree, False)
+        return out
+
+
+class AsyncHygiene(Rule):
+    """No blocking calls inside ``async def`` bodies.
+
+    One stalled coroutine stalls every request behind it; blocking file IO
+    and sleeps belong on the sync side (or behind an executor).  Nested
+    ``def``s are exempt — a sync helper defined inside an async function is
+    called, not awaited, and judged where it runs.
+    """
+
+    name = "async-hygiene"
+    description = "no blocking IO or time.sleep inside async def"
+
+    BLOCKING_DOTTED = frozenset({
+        "time.sleep",
+        "io.open",
+        "os.remove", "os.rename", "os.replace", "os.unlink",
+        "shutil.copy", "shutil.copyfile", "shutil.move", "shutil.rmtree",
+        "subprocess.run", "subprocess.call", "subprocess.check_call",
+        "subprocess.check_output",
+    })
+    BLOCKING_BARE = frozenset({"open", "input"})
+
+    def check(self, tree: ast.AST, path: str) -> list[Finding]:
+        out: list[Finding] = []
+
+        def scan(node: ast.AST) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return                      # judged in its own right
+            if isinstance(node, ast.Call):
+                dotted = _dotted(node.func)
+                bare = node.func.id if isinstance(node.func, ast.Name) else None
+                if dotted in self.BLOCKING_DOTTED or bare in self.BLOCKING_BARE:
+                    out.append(self.finding(
+                        path, node,
+                        f"blocking call {dotted or bare}() inside async def "
+                        "stalls the event loop"))
+            for child in ast.iter_child_nodes(node):
+                scan(child)
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.AsyncFunctionDef):
+                for stmt in node.body:
+                    scan(stmt)
+        return out
+
+
+class KernelPurity(Rule):
+    """Pallas kernel bodies must be pure array programs.
+
+    A kernel body runs per grid cell on device (or is traced as if it did):
+    host randomness, file IO, printing and clock reads either fail at trace
+    time or — worse — silently bake one host value into the compiled
+    program.  Kernel functions are recognized by the repo convention
+    (``*_kernel`` name) and by being passed to ``pallas_call`` (directly or
+    through ``functools.partial``).
+    """
+
+    name = "kernel-purity"
+    description = ("no host randomness/IO/clock inside Pallas kernel bodies")
+
+    FORBIDDEN_PREFIXES = ("np.random.", "numpy.random.", "random.",
+                          "time.", "os.", "io.")
+    FORBIDDEN_BARE = frozenset({"open", "print", "input"})
+
+    @staticmethod
+    def _kernel_names(tree: ast.AST) -> set[str]:
+        names = {
+            node.name
+            for node in ast.walk(tree)
+            if isinstance(node, ast.FunctionDef)
+            and node.name.endswith("_kernel")
+        }
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func) or ""
+            if not dotted.endswith("pallas_call") or not node.args:
+                continue
+            arg0 = node.args[0]
+            if isinstance(arg0, ast.Name):
+                names.add(arg0.id)
+            elif isinstance(arg0, ast.Call):     # functools.partial(kernel, ..)
+                inner = _dotted(arg0.func) or ""
+                if inner.endswith("partial") and arg0.args \
+                        and isinstance(arg0.args[0], ast.Name):
+                    names.add(arg0.args[0].id)
+        return names
+
+    def check(self, tree: ast.AST, path: str) -> list[Finding]:
+        kernels = self._kernel_names(tree)
+        if not kernels:
+            return []
+        out: list[Finding] = []
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.FunctionDef)
+                    and node.name in kernels):
+                continue
+            for inner in ast.walk(node):
+                if not isinstance(inner, ast.Call):
+                    continue
+                dotted = _dotted(inner.func)
+                bare = inner.func.id \
+                    if isinstance(inner.func, ast.Name) else None
+                hit = (bare in self.FORBIDDEN_BARE
+                       or (dotted is not None and any(
+                           dotted.startswith(p)
+                           for p in self.FORBIDDEN_PREFIXES)))
+                if hit:
+                    out.append(self.finding(
+                        path, inner,
+                        f"host-side call {dotted or bare}() inside kernel "
+                        f"body {node.name}()"))
+        return out
+
+
+class VmemBudgetLiteral(Rule):
+    """The VMEM budget value must not be re-spelled as a literal.
+
+    Folds pure-literal integer arithmetic (``64 * 1024 * 1024``,
+    ``1 << 26``, ...) and flags any expression equal to the canonical
+    budget outside ``core/autotune.py`` — import
+    ``repro.core.autotune.VMEM_BUDGET_BYTES`` instead, so a future budget
+    change lands everywhere at once.
+    """
+
+    name = "vmem-budget-literal"
+    description = ("VMEM budget literal outside core/autotune.py; import "
+                   "VMEM_BUDGET_BYTES")
+
+    def applies(self, path: str) -> bool:
+        norm = os.path.abspath(path)
+        return not norm.endswith(os.path.join("core", "autotune.py"))
+
+    @staticmethod
+    def _fold(node: ast.AST):
+        if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+                and not isinstance(node.value, bool):
+            return node.value
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = VmemBudgetLiteral._fold(node.operand)
+            return -v if v is not None else None
+        if isinstance(node, ast.BinOp):
+            left = VmemBudgetLiteral._fold(node.left)
+            right = VmemBudgetLiteral._fold(node.right)
+            if left is None or right is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Mult):
+                    return left * right
+                if isinstance(node.op, ast.Add):
+                    return left + right
+                if isinstance(node.op, ast.Sub):
+                    return left - right
+                if isinstance(node.op, ast.FloorDiv):
+                    return left // right if right else None
+                if isinstance(node.op, ast.LShift):
+                    return left << right
+                if isinstance(node.op, ast.Pow):
+                    return left ** right if abs(right) < 64 else None
+            except (OverflowError, ValueError):
+                return None
+        return None
+
+    def check(self, tree: ast.AST, path: str) -> list[Finding]:
+        # the single source of truth, imported lazily so the lint engine
+        # itself stays stdlib-importable
+        from repro.core.autotune import VMEM_BUDGET_BYTES
+
+        out: list[Finding] = []
+
+        def visit(node: ast.AST) -> None:
+            folded = self._fold(node)
+            if folded == VMEM_BUDGET_BYTES:
+                out.append(self.finding(
+                    path, node,
+                    f"literal VMEM budget ({folded} bytes); import "
+                    "repro.core.autotune.VMEM_BUDGET_BYTES"))
+                return                        # topmost match only
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        visit(tree)
+        return out
+
+
+ALL_RULES: tuple[Rule, ...] = (
+    CompatDiscipline(),
+    TuneCacheLockDiscipline(),
+    AsyncHygiene(),
+    KernelPurity(),
+    VmemBudgetLiteral(),
+)
+
+
+def rule_names() -> list[str]:
+    return [r.name for r in ALL_RULES]
+
+
+def resolve_rules(rules=None) -> list[Rule]:
+    """Normalize a mixed list of Rule objects / rule names (None = all)."""
+    if rules is None:
+        return list(ALL_RULES)
+    by_name = {r.name: r for r in ALL_RULES}
+    out: list[Rule] = []
+    for r in rules:
+        if isinstance(r, Rule):
+            out.append(r)
+        elif r in by_name:
+            out.append(by_name[r])
+        else:
+            raise KeyError(
+                f"unknown lint rule {r!r}; shipped rules: {sorted(by_name)}")
+    return out

@@ -14,6 +14,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.preflight import (
+    SlabMeta,
+    plan_bfs_sell,
+    plan_fft_stockham,
+    plan_pagerank_sell,
+    plan_spmm_sell,
+)
 from repro.core.autotune import SellTuneResult, tune_sell_layout
 from repro.graphs.gen import EllpackGraph, graph_to_sell_slabs
 from repro.kernels import bfs as bfs_k
@@ -27,7 +34,6 @@ from repro.sparse.formats import (
     EllpackMatrix,
     SellCSigmaMatrix,
     SellSlabs,
-    csr_to_ellpack,
     csr_to_sell_slabs,
     sell_to_slabs,
     to_csr,
@@ -99,6 +105,15 @@ def _repack_cached(matrix, vl: int, sigma: int | None, cache) -> SellSlabs:
 def _spmm_slabs(
     slabs: SellSlabs, x, *, w_block: int, k_block: int, interpret: bool
 ) -> jnp.ndarray:
+    # static preflight: reject contract-violating launches (VMEM budget,
+    # pow2 tiles, dtype flow) with a structured error before XLA sees them
+    plan_spmm_sell(
+        SlabMeta.from_slabs(slabs),
+        k=int(x.shape[1]),
+        x_dtype=str(x.dtype),
+        w_block=w_block,
+        k_block=k_block,
+    ).raise_if_invalid()
     return sell_core.spmm_sell(
         tuple(jnp.asarray(c) for c in slabs.bucket_cols),
         tuple(jnp.asarray(v) for v in slabs.bucket_vals),
@@ -331,6 +346,10 @@ def fft(
     interpret = default_interpret() if interpret is None else interpret
     wre, wim = fft_twiddles(n, re.dtype)
     b_block = min(b_block, re.shape[0])
+    plan_fft_stockham(
+        int(n), batch=int(re.shape[0]), b_block=int(b_block),
+        dtype=str(re.dtype),
+    ).raise_if_invalid()
     return fft_k.fft_stockham(re, im, wre, wim, b_block=b_block, interpret=interpret)
 
 
@@ -368,6 +387,9 @@ def bfs(
     rgraph = graph.transpose()
     if layout == "sell":
         slabs = graph_to_sell_slabs(rgraph, c=vl, sigma=sigma)
+        plan_bfs_sell(
+            SlabMeta.from_slabs(slabs), k=int(np.size(source)),
+        ).raise_if_invalid()
         dist = bfs_k.bfs_sell(
             tuple(jnp.asarray(a) for a in slabs.bucket_adj),
             tuple(jnp.asarray(m) for m in slabs.bucket_nodes),
@@ -414,6 +436,10 @@ def pagerank(
     n = graph.n_nodes
     if layout == "sell":
         slabs = graph_to_sell_slabs(graph.transpose(), c=vl, sigma=sigma)
+        plan_pagerank_sell(
+            SlabMeta.from_slabs(slabs),
+            k=max(int(np.size(damping)), int(np.size(iters))),
+        ).raise_if_invalid()
         rank = pr_k.pagerank_sell(
             tuple(jnp.asarray(a) for a in slabs.bucket_adj),
             tuple(jnp.asarray(m) for m in slabs.bucket_nodes),

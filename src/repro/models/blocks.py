@@ -15,7 +15,6 @@ Block kinds:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

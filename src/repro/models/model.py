@@ -20,7 +20,6 @@ a single device) applies — the old ergonomics, preserved.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,6 @@ import jax.numpy as jnp
 from repro.compat import use_mesh
 from repro.models import attention as attn_mod
 from repro.models import blocks as blk
-from repro.models.attention import KVCache
 from repro.models.blocks import LayerCaches
 from repro.models.config import ModelConfig
 from repro.models.layers import embed_init, he_init, rms_norm

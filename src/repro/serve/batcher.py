@@ -15,7 +15,7 @@ shared decode step per scheduling round.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Sequence
 
 import numpy as np
 
@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.compat import concrete_mesh, use_mesh
 from repro.models import model as M
 from repro.models.config import ModelConfig
-from repro.serve.engine import GenerationConfig, sample_token
+from repro.serve.engine import GenerationConfig
 from repro.serve.slots import SlotLoop
 
 

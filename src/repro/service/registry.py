@@ -16,6 +16,13 @@ from typing import Any
 
 import numpy as np
 
+from repro.analysis.preflight import (
+    SlabMeta,
+    plan_bfs_sell,
+    plan_fft_stockham,
+    plan_pagerank_sell,
+    plan_spmm_sell,
+)
 from repro.core.autotune import SellTuneResult
 from repro.core.sdv import MachineParams, tpu_v5e_machine
 from repro.graphs.gen import EllpackGraph, graph_to_sell_slabs
@@ -45,6 +52,8 @@ class RegisteredOperand:
     register_us: float = 0.0                # wall time spent registering
     tune_was_cached: bool = False
     launches: int = 0                       # batched core launches served
+    slab_meta: Any = None                   # SlabMeta (bounds-scanned) | None
+    plans: dict = dataclasses.field(default_factory=dict)  # op -> LaunchPlan
 
     @property
     def pad_factor(self) -> float:
@@ -117,6 +126,16 @@ class KernelRegistry:
             slabs=slabs, n=csr.n_rows, n_cols=csr.n_cols,
             tune_was_cached=self.cache.hits > before,
         )
+        # registration-time preflight: one bounds scan over the stored
+        # indices plus the static launch plan for the tuned tiles — a
+        # corrupt pack or a stale/poisoned cached tune is rejected here
+        # with a structured LaunchPlanError, never served
+        op.slab_meta = SlabMeta.from_slabs(slabs, check_bounds=True)
+        op.plans = {"spmv": plan_spmm_sell(
+            op.slab_meta, k=max(1, tuned.k_block),
+            x_dtype=str(csr.data.dtype),
+            w_block=tuned.w_block, k_block=tuned.k_block,
+        ).raise_if_invalid()}
         op.device_arrays = _matrix_device_arrays(slabs)
         return self._admit(op, t0)
 
@@ -155,6 +174,11 @@ class KernelRegistry:
             slabs=slabs, n=graph.n_nodes,
             tune_was_cached=self.cache.hits > before,
         )
+        op.slab_meta = SlabMeta.from_slabs(slabs, check_bounds=True)
+        op.plans = {
+            "bfs": plan_bfs_sell(op.slab_meta).raise_if_invalid(),
+            "pagerank": plan_pagerank_sell(op.slab_meta).raise_if_invalid(),
+        }
         op.device_arrays = _graph_device_arrays(slabs, graph)
         return self._admit(op, t0)
 
@@ -169,6 +193,8 @@ class KernelRegistry:
             raise ValueError(f"fft length must be a power of two >= 2, got {n}")
         wre, wim = fft_twiddles(n, np.float64)
         op = RegisteredOperand(name=name, kind="fft", signature=None, n=n)
+        op.plans = {
+            "fft": plan_fft_stockham(n, batch=8).raise_if_invalid()}
         op.device_arrays = {"wre": jnp.asarray(wre), "wim": jnp.asarray(wim)}
         return self._admit(op, t0)
 

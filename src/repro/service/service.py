@@ -36,8 +36,16 @@ from typing import Any, Sequence
 
 import numpy as np
 
+from repro.analysis.launchplan import LaunchPlan, LaunchPlanError
+from repro.analysis.preflight import (
+    plan_bfs_sell,
+    plan_fft_stockham,
+    plan_pagerank_sell,
+    plan_spmm_sell,
+)
 from repro.service.registry import KernelRegistry, RegisteredOperand
 from repro.serve.slots import SlotLoop
+from repro.sparse.formats import pow2_ceil
 
 OPS = ("spmv", "bfs", "pagerank", "fft")
 
@@ -99,7 +107,7 @@ class KernelService(SlotLoop[KernelRequest]):
         self.stats = {
             "submitted": 0, "served": 0, "failed": 0, "rejected": 0,
             "steps": 0, "groups": 0, "coalesced": 0, "max_group": 0,
-            "launches": 0,
+            "launches": 0, "preflight_rejected": 0,
         }
 
     # -- async API ---------------------------------------------------------
@@ -113,7 +121,8 @@ class KernelService(SlotLoop[KernelRequest]):
         """
         if op not in OPS:
             raise ValueError(f"unknown op {op!r}: expected one of {OPS}")
-        self.registry.get(operand)          # fail fast on unknown operands
+        record = self.registry.get(operand)  # fail fast on unknown operands
+        self._preflight(op, record)          # ... and on infeasible launches
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             self.stats["rejected"] += 1
             raise QueueFull(
@@ -181,6 +190,52 @@ class KernelService(SlotLoop[KernelRequest]):
             "p50_us": round(float(p50), 1),
             "p95_us": round(float(p95), 1),
             "p99_us": round(float(p99), 1),
+        }
+
+    # -- launch preflight --------------------------------------------------
+    def _operand_plans(self, record: RegisteredOperand) -> dict[str, LaunchPlan]:
+        """Live launch plans for every op this operand can serve, derived
+        from the *current* tuned tiles (not the registration snapshot): a
+        tune that drifts out of the VMEM envelope after registration is
+        caught at the next submit."""
+        plans: dict[str, LaunchPlan] = {}
+        if record.kind == "matrix" and record.slab_meta is not None:
+            tuned = record.tuned
+            plans["spmv"] = plan_spmm_sell(
+                record.slab_meta, k=max(1, tuned.k_block),
+                x_dtype=record.slab_meta.val_dtype,
+                w_block=tuned.w_block, k_block=tuned.k_block)
+        elif record.kind == "graph" and record.slab_meta is not None:
+            # worst case: a full coalesced group, pow2-padded
+            k = pow2_ceil(max(1, self.n_slots))
+            plans["bfs"] = plan_bfs_sell(record.slab_meta, k=k)
+            plans["pagerank"] = plan_pagerank_sell(record.slab_meta, k=k)
+        elif record.kind == "fft":
+            plans["fft"] = plan_fft_stockham(record.n, batch=8)
+        return plans
+
+    def _preflight(self, op: str, record: RegisteredOperand) -> None:
+        """Admission-time launch-contract check: an operand whose plan
+        violates a contract (VMEM budget, pow2 tiles, dtype flow) is
+        rejected HERE with a structured :class:`LaunchPlanError` — no
+        kernel launch, no opaque XLA failure deep inside a request."""
+        plan = self._operand_plans(record).get(op)
+        if plan is None:                # op/kind mismatch: fails at execute
+            return
+        try:
+            plan.raise_if_invalid()
+        except LaunchPlanError:
+            self.stats["preflight_rejected"] += 1
+            raise
+
+    def plans(self) -> dict[str, dict[str, dict]]:
+        """Observability: the current launch-plan summary for every
+        registered operand, keyed name -> op."""
+        return {
+            name: {op: plan.summary()
+                   for op, plan in
+                   self._operand_plans(self.registry.get(name)).items()}
+            for name in self.registry.names()
         }
 
     # -- SlotLoop hooks ----------------------------------------------------

@@ -36,6 +36,7 @@ import contextlib
 import dataclasses
 import hashlib
 import os
+import warnings
 from collections import OrderedDict
 from typing import Any, Iterable, Mapping
 
@@ -166,17 +167,25 @@ def _file_lock(path: str | None):
     across worker processes sharing one cache file.  Advisory by design:
     readers of the store itself are safe without it (writes land via
     atomic rename), and on platforms without fcntl the lock degrades to a
-    no-op (single-worker behavior, last writer wins).
+    no-op (single-worker behavior, last writer wins).  Yields True when a
+    real lock is held, False when the section runs unprotected — callers
+    that care about multi-worker safety (:meth:`TuneCache._locked`) surface
+    the degrade instead of hiding it.
     """
     if fcntl is None or path is None:
-        yield
+        yield False
         return
     with open(path + ".lock", "a+") as fh:
         fcntl.flock(fh, fcntl.LOCK_EX)
         try:
-            yield
+            yield True
         finally:
             fcntl.flock(fh, fcntl.LOCK_UN)
+
+
+#: process-wide once-flag for the lock-degrade warning: a fleet worker on a
+#: non-POSIX platform should hear about unsafe sharing once, not per save
+_DEGRADE_WARNED = False
 
 
 # ---------------------------------------------------------------------------
@@ -245,9 +254,40 @@ class TuneCache:
         self.max_packed = max_packed
         self.hits = 0
         self.misses = 0
+        #: critical sections that ran WITHOUT a real file lock on a cache
+        #: that has a persistence path — nonzero means multi-worker sharing
+        #: of this path is unsafe (last writer wins)
+        self.lock_degraded = 0
         if path is not None and os.path.exists(path):
-            with _file_lock(path):
+            with self._locked():
                 self._load(strict)
+
+    @contextlib.contextmanager
+    def _locked(self):
+        """The cache's advisory-lock critical section.
+
+        Every persisted read-modify-write flows through here (the lint rule
+        ``tunecache-lock-discipline`` enforces it).  When the platform
+        cannot take a real lock the degrade is *surfaced*: counted in
+        ``stats['lock_degraded']`` and warned once per process, so a
+        multi-worker deployment can detect unsafe cache sharing instead of
+        silently losing tunes to last-writer-wins races.
+        """
+        global _DEGRADE_WARNED
+        with _file_lock(self.path) as held:
+            if not held and self.path is not None:
+                self.lock_degraded += 1
+                if not _DEGRADE_WARNED:
+                    _DEGRADE_WARNED = True
+                    warnings.warn(
+                        "fcntl is unavailable on this platform: TuneCache "
+                        f"file locking for {self.path!r} is degraded to "
+                        "last-writer-wins; sharing this cache path across "
+                        "worker processes may lose tunes",
+                        RuntimeWarning,
+                        stacklevel=3,
+                    )
+            yield
 
     def _load(self, strict: bool) -> None:
         doc = load_json(self.path)
@@ -306,7 +346,7 @@ class TuneCache:
         other's tunes to a last-writer-wins race."""
         if self.path is None:
             raise ValueError("TuneCache was created without a path")
-        with _file_lock(self.path):
+        with self._locked():
             if merge and os.path.exists(self.path):
                 self._merge_from_disk()
             doc = {
@@ -461,4 +501,5 @@ class TuneCache:
             "hits": self.hits,
             "misses": self.misses,
             "packed": len(self._packed),
+            "lock_degraded": self.lock_degraded,
         }

@@ -25,7 +25,6 @@ from repro.runtime.heartbeat import StepMonitor
 from repro.train.step import TrainConfig, TrainState, init_train_state, make_train_step
 
 import jax.numpy as jnp
-import numpy as np
 
 
 def _placements(mesh, cfg, state_sds, dcfg: DataConfig):

@@ -1,0 +1,4 @@
+# Known-bad lint fixtures: each module violates exactly ONE rule, exactly
+# once.  The default lint walk never enters this directory (it is in
+# DEFAULT_EXCLUDE); tests lint each file explicitly and assert the expected
+# single finding.

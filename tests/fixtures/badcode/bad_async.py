@@ -1,0 +1,13 @@
+"""Fixture: blocking call inside async def (async-hygiene)."""
+import asyncio
+import time
+
+
+async def poll_slowly(engine):
+    while not engine.done:
+        time.sleep(0.01)            # the one violation: stalls the loop
+        await asyncio.sleep(0)
+
+
+def sync_wait():
+    time.sleep(0.01)                # fine: sync context

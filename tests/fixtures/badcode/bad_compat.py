@@ -1,0 +1,6 @@
+"""Fixture: direct use of a version-sensitive jax API (compat-discipline)."""
+import jax
+
+
+def current_mesh():
+    return jax.set_mesh(None)       # the one violation in this file

@@ -1,0 +1,11 @@
+"""Fixture: host-side randomness inside a kernel body (kernel-purity)."""
+import numpy as np
+
+
+def noisy_kernel(x_ref, o_ref):
+    noise = np.random.standard_normal(8)        # the one violation
+    o_ref[...] = x_ref[...] + noise
+
+
+def host_side_setup():
+    return np.random.standard_normal(8)         # fine: not a kernel body

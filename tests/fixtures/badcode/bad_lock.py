@@ -1,0 +1,12 @@
+"""Fixture: persisted write outside the lock (tunecache-lock-discipline)."""
+from repro.core.jsonstore import atomic_write_json
+from repro.service.tunecache import _file_lock
+
+
+def save_locked(path, doc):
+    with _file_lock(path):
+        return atomic_write_json(path, doc)     # correct: inside the lock
+
+
+def save_racy(path, doc):
+    return atomic_write_json(path, doc)         # the one violation: no lock

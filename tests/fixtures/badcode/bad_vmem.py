@@ -1,0 +1,5 @@
+"""Fixture: hardcoded VMEM budget literal (vmem-budget-literal)."""
+
+
+def fits_in_vmem(footprint_bytes: int) -> bool:
+    return footprint_bytes <= 64 * 1024 * 1024  # the one violation

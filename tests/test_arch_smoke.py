@@ -5,7 +5,6 @@ the same family, run one forward and one gradient (train) step on CPU, and
 check output shapes + finiteness; then verify incremental decode matches the
 teacher-forced forward — the serving-correctness invariant.
 """
-import dataclasses
 
 import numpy as np
 import pytest

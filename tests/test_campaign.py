@@ -16,7 +16,6 @@ from repro.core import sweep, traffic
 from repro.core.campaign import (
     BW_UNLIMITED,
     SCHEMA_VERSION,
-    CampaignResult,
     CampaignSpec,
     SweepStore,
     campaign_names,

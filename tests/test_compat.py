@@ -8,7 +8,6 @@ collection speed instead of as 69 scattered AttributeErrors.
 import importlib
 import os
 import pkgutil
-import re
 
 import numpy as np
 import pytest
@@ -57,23 +56,14 @@ def test_import_sweep(name):
 def test_no_version_sensitive_jax_outside_compat():
     """The acceptance gate of the compat refactor, kept green forever: no
     module under src/repro references the new-jax-only sharding APIs except
-    through repro.compat."""
-    forbidden = re.compile(
-        r"jax\.sharding\.(get_abstract_mesh|AxisType)|jax\.set_mesh|jax\.make_mesh"
-    )
-    offenders = []
-    for dirpath, _dirnames, filenames in os.walk(SRC_ROOT):
-        if os.path.basename(dirpath) == "compat":
-            continue
-        for fn in filenames:
-            if not fn.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, fn)
-            with open(path) as f:
-                for lineno, line in enumerate(f, 1):
-                    if forbidden.search(line):
-                        offenders.append(f"{path}:{lineno}: {line.strip()}")
-    assert not offenders, "\n".join(offenders)
+    through repro.compat.  A thin wrapper over the repo lint engine — the
+    forbidden-API list lives in ONE place
+    (repro.analysis.rules.CompatDiscipline) and gains real AST matching
+    plus per-file ``# lint-ok`` suppressions."""
+    from repro.analysis import lint_paths
+
+    offenders = lint_paths([SRC_ROOT], rules=["compat-discipline"])
+    assert not offenders, "\n".join(str(f) for f in offenders)
 
 
 # ---------------------------------------------------------------------------

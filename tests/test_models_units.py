@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.models import attention as A
 from repro.models import moe as moe_mod
 from repro.models import ssm as S
-from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+from repro.models.config import ModelConfig, MoEConfig
 from repro.models.layers import rms_norm, softmax_cross_entropy
 
 RNG = np.random.default_rng(7)

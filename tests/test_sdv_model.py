@@ -10,7 +10,7 @@ import math
 import pytest
 from _hypothesis_fallback import given, settings, st
 
-from repro.core import sdv, sweep, traffic
+from repro.core import sweep, traffic
 from repro.core.autotune import tune_vl
 from repro.core.sdv import MachineParams, SDVMachine
 from repro.core.vconfig import PAPER_VLS, SCALAR_VL, VectorConfig
