@@ -13,6 +13,8 @@ import numpy as np
 
 import jax
 
+from benchmarks import bench_roofline
+from repro.analysis.launchplan import LaunchPlanError
 from repro.graphs import gen as G
 from repro.kernels import ops, ref
 from repro.sparse import formats as F
@@ -53,6 +55,42 @@ def rows():
     t_sell = _time(lambda: ops.spmv(slabs, xs, vl=128))
     yield ("spmv_skew_sell_slabs_vl128", t_sell,
            {"pad_factor": round(slabs.pad_factor, 4), "n_buckets": slabs.n_buckets})
+
+    # Out-of-VMEM streaming SpMM: the same in-VMEM operand through both
+    # schedules (the slowdown gates the double-buffered pipeline's overlap),
+    # then a giant operand whose resident plan the preflight rejects —
+    # streaming is the ONLY way it runs.  The giant row is runtime-capped
+    # to a single rep (bench-smoke budget).
+    sq = F.random_csr(4096, 4096, 8.0, seed=5)
+    slabs_sq = F.csr_to_sell_slabs(sq, c=128, sigma=1024)
+    xk = np.random.default_rng(2).standard_normal((4096, 8))
+    t_res = _time(lambda: ops.spmm(slabs_sq, xk, vl=128, mode="resident"))
+    yield ("spmm_4k_k8_resident", t_res,
+           {"pad_factor": round(slabs_sq.pad_factor, 4)})
+    t_str = _time(lambda: ops.spmm(slabs_sq, xk, vl=128, mode="stream"))
+    yield ("spmm_4k_k8_stream", t_str,
+           # streaming/resident throughput >= 0.7 <=> slowdown <= 1/0.7
+           {"stream_slowdown": round(t_str / t_res, 3),
+            "stream_vs_resident_throughput": round(t_res / t_str, 3)})
+
+    giant = F.random_csr(1 << 20, 1 << 20, 4.0, seed=9)
+    slabs_g = F.csr_to_sell_slabs(giant, c=512, sigma=4096)
+    xg = np.random.default_rng(3).standard_normal((1 << 20, 8))
+    try:
+        ops.spmm(slabs_g, xg, vl=512, mode="resident")
+        accepted = 1                 # the honest-footprint model regressed
+    except LaunchPlanError:
+        accepted = 0                 # the operand streaming exists for
+    t_g = _time(lambda: ops.spmm(slabs_g, xg, vl=512, mode="stream"), reps=1)
+    model = bench_roofline.spmm_stream_terms(
+        1 << 20, 1 << 20, giant.nnz, 8, c=512,
+        pad_factor=slabs_g.pad_factor)
+    yield ("spmm_1m_rows_k8_stream", t_g,
+           {"resident_plan_accepted": accepted,
+            "pad_factor": round(slabs_g.pad_factor, 4),
+            "modeled_overlap_speedup": round(model["overlap_speedup"], 3),
+            "modeled_dominant": model["dominant"]})
+    del giant, slabs_g, xg           # O(100 MB) of host arrays
 
     sig = np.random.default_rng(1).standard_normal((8, 2048))
     t_kernel = _time(lambda: ops.fft(sig))

@@ -31,6 +31,7 @@ def _self_check_plans(out=sys.stdout) -> int:
         plan_fft_stockham,
         plan_pagerank_sell,
         plan_spmm_sell,
+        plan_spmm_sell_stream,
     )
     from repro.graphs.gen import graph_to_sell_slabs, random_graph
     from repro.sparse.formats import csr_to_sell_slabs, random_csr
@@ -43,6 +44,7 @@ def _self_check_plans(out=sys.stdout) -> int:
     plans = [
         plan_spmm_sell(mat, k=1, x_dtype="float64"),
         plan_spmm_sell(mat, k=8, x_dtype="float64"),
+        plan_spmm_sell_stream(mat, k=8, x_dtype="float64"),
         plan_bfs_sell(gm, k=8),
         plan_pagerank_sell(gm, k=8),
         plan_fft_stockham(n=1024, batch=32),
@@ -51,7 +53,26 @@ def _self_check_plans(out=sys.stdout) -> int:
     for plan in plans:
         print(plan.table(), file=out)
         bad += 0 if plan.ok else 1
-    print(f"launch-plan self-check: {len(plans) - bad}/{len(plans)} ok",
+    # The streaming path exists for operands the resident plan honestly
+    # rejects: prove the rejection -> acceptance pair on a synthetic
+    # million-row operand (metadata only — nothing is packed or launched).
+    giant = SlabMeta(
+        kind="matrix", c=8, widths=(8,), n_slices=(1 << 17,),
+        n_rows=1 << 20, n_cols=1 << 20, val_dtype="float64",
+        idx_dtype="int32")
+    reject = plan_spmm_sell(giant, k=8, x_dtype="float64")
+    accept = plan_spmm_sell_stream(giant, k=8, x_dtype="float64")
+    print(accept.table(), file=out)
+    if reject.ok:
+        print("EXPECTED-REJECT FAILED: resident plan accepted the "
+              f"giant operand {giant.describe()}", file=out)
+        bad += 1
+    if not accept.ok:
+        bad += 1
+    else:
+        plans.append(accept)
+    print(f"launch-plan self-check: {len(plans) - bad}/{len(plans)} ok "
+          "(+ giant-operand resident rejection proved)",
           file=out)
     return bad
 

@@ -2,6 +2,7 @@
 
 Each ``plan_*`` function mirrors the launch arithmetic of its kernel wrapper
 (:func:`repro.kernels.sell_core.spmm_sell`,
+:func:`repro.kernels.sell_core.spmm_sell_stream`,
 :func:`repro.kernels.sell_core.bucketed_node_step` as driven by the BFS /
 PageRank kernels, :func:`repro.kernels.fft.fft_stockham`) without importing
 or executing any of them: the grid dims, block shapes and per-cell VMEM
@@ -45,6 +46,7 @@ __all__ = [
     "plan_fft_stockham",
     "plan_pagerank_sell",
     "plan_spmm_sell",
+    "plan_spmm_sell_stream",
 ]
 
 _IDX_BYTES = 4                       # int32 column / adjacency indices
@@ -147,8 +149,12 @@ def plan_spmm_sell(
     Mirrors the wrapper's tiling: per bucket the W axis is padded to a
     multiple of ``min(w_block, W)`` and the k axis to a multiple of
     ``min(k_block, pow2_ceil(k))``; one grid cell holds the double-buffered
-    (w_eff, C) cols+vals tiles, the VMEM-resident (n_cols, k_tile) RHS
-    block, and the (C, k_tile) output tile.
+    (w_eff, C) cols+vals tiles, the (n_cols, k_tile) RHS block, and the
+    (C, k_tile) output tile.  Pallas pipelines *every* BlockSpec operand
+    through a pair of VMEM buffers — the RHS block and output tile are
+    priced at 2x just like the slab tiles, so the plan honestly rejects
+    operands whose "resident" X only fits once.  Operands rejected here
+    belong on the streaming schedule (:func:`plan_spmm_sell_stream`).
     """
     violations: list[str] = []
     if not is_pow2(w_block):
@@ -176,8 +182,8 @@ def plan_spmm_sell(
         grid = (s, k_pad // k_tile, w_pad // w_eff)
         footprint = (
             2 * w_eff * meta.c * (vb + _IDX_BYTES)   # double-buffered slab tile
-            + meta.n_cols * k_tile * xb              # VMEM-resident RHS block
-            + meta.c * k_tile * vb                   # output tile
+            + 2 * meta.n_cols * k_tile * xb          # pipelined RHS block pair
+            + 2 * meta.c * k_tile * vb               # pipelined output pair
         )
         if footprint > vmem_budget:
             violations.append(
@@ -197,6 +203,91 @@ def plan_spmm_sell(
         ))
     return LaunchPlan(
         kernel="spmm_sell", operand=meta.describe(), dtype=val_dtype,
+        vmem_budget=int(vmem_budget), blocks=tuple(blocks),
+        violations=tuple(violations),
+    )
+
+
+def plan_spmm_sell_stream(
+    meta: SlabMeta,
+    k: int = 1,
+    x_dtype: str | None = None,
+    *,
+    w_block: int = 8,
+    k_block: int = 8,
+    col_tile: int = 1 << 16,
+    row_tile: int = 8,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> LaunchPlan:
+    """Plan ``spmm_sell_stream`` — the out-of-VMEM schedule for these slabs.
+
+    Nothing is VMEM-resident: slabs, X and Y stay in HBM (``ANY`` memory)
+    and the kernel owns its buffers as explicit scratch, so the per-cell
+    footprint is exactly the scratch it allocates — double-buffered
+    (w_eff, C) cols+vals tile *pairs*, a double-buffered
+    (col_tile, k_tile) RHS tile pair, and one (row_tile, C, k_tile)
+    accumulator — independent of ``n_cols`` and ``n_rows``.  The wrapper
+    coerces ``col_tile`` to a power of two clamped at ``pow2_ceil(n_cols)``
+    and clamps ``row_tile`` per bucket at its slice count; the plan mirrors
+    both, so a giant operand the resident plan rejects produces a *valid*
+    streaming plan here (the rejection -> acceptance pair the analysis CLI
+    self-check proves).
+    """
+    violations: list[str] = []
+    if not is_pow2(w_block):
+        violations.append(f"w_block {w_block} is not a power of two")
+    if not is_pow2(k_block):
+        violations.append(f"k_block {k_block} is not a power of two")
+    if col_tile < 1:
+        violations.append(f"col_tile must be >= 1, got {col_tile}")
+    if row_tile < 1:
+        violations.append(f"row_tile must be >= 1, got {row_tile}")
+    if k < 1:
+        violations.append(f"RHS stack must have k >= 1 columns, got {k}")
+    _shared_slab_contracts(meta, violations)
+    val_dtype = meta.val_dtype or "float64"
+    vb = _dtype_bytes(val_dtype)
+    if x_dtype is not None:
+        if not np.issubdtype(np.dtype(x_dtype), np.floating):
+            violations.append(f"RHS dtype {x_dtype} is not floating")
+        elif meta.val_dtype is not None and x_dtype != meta.val_dtype:
+            violations.append(
+                f"RHS dtype {x_dtype} != slab value dtype {meta.val_dtype}")
+    k_tile = min(max(int(k_block), 1), pow2_ceil(max(k, 1)))
+    k_pad = k_tile * math.ceil(max(k, 1) / k_tile)
+    xb = _dtype_bytes(x_dtype) if x_dtype is not None else vb
+    ct = min(pow2_ceil(max(int(col_tile), 1)), pow2_ceil(max(meta.n_cols, 1)))
+    blocks = []
+    for i, (s, w) in enumerate(zip(meta.n_slices, meta.widths)):
+        w_eff = min(max(int(w_block), 1), w)
+        w_pad = w_eff * math.ceil(w / w_eff)
+        rt = min(max(int(row_tile), 1), max(s, 1))
+        s_pad = rt * math.ceil(max(s, 1) / rt)
+        grid = (s_pad // rt, k_pad // k_tile)
+        footprint = (
+            2 * w_eff * meta.c * (vb + _IDX_BYTES)   # slab tile pairs
+            + 2 * ct * k_tile * xb                   # RHS tile pair
+            + rt * meta.c * k_tile * vb              # accumulator
+        )
+        if footprint > vmem_budget:
+            violations.append(
+                f"bucket {i} (W={w}): per-cell scratch {footprint} B "
+                f"exceeds VMEM budget {vmem_budget} B "
+                f"(w_block={w_block}, k_block={k_block}, col_tile={ct}, "
+                f"row_tile={rt})")
+        blocks.append(BlockPlan(
+            label=f"bucket{i}[W={w}]",
+            grid=grid,
+            blocks=(
+                ("cols_buf", (2, w_eff, meta.c), meta.idx_dtype),
+                ("vals_buf", (2, w_eff, meta.c), val_dtype),
+                ("x_buf", (2, ct, k_tile), x_dtype or val_dtype),
+                ("y_acc", (rt, meta.c, k_tile), val_dtype),
+            ),
+            vmem_bytes=footprint,
+        ))
+    return LaunchPlan(
+        kernel="spmm_sell_stream", operand=meta.describe(), dtype=val_dtype,
         vmem_budget=int(vmem_budget), blocks=tuple(blocks),
         violations=tuple(violations),
     )

@@ -105,6 +105,11 @@ class SellTuneResult:
     #: RHS tile of the batched SpMM core (multi-RHS requests per grid cell);
     #: defaulted for tune entries persisted before the k axis existed
     k_block: int = 8
+    #: streaming-schedule tiles (`spmm_sell_stream`): X column tile and the
+    #: slab row tile per grid cell; defaulted for tune entries persisted
+    #: before the out-of-VMEM path existed
+    col_tile: int = 1 << 16
+    row_tile: int = 8
 
     def speedup_over_worst(self) -> float:
         worst = max(cy for *_, cy in self.table)
@@ -167,22 +172,63 @@ def pick_k_block(
 
     The k axis of the batched SpMM core amortizes the slab traffic across
     right-hand sides, so wider is strictly better until the VMEM-resident
-    X block (8 B * n_cols per column), the (C, k) output tile, and the
-    double-buffered slab tile stop fitting together — the co-tune is the
-    greedy fill, capped at ``k_max`` (beyond the cap the amortization has
-    flattened and compile-time variants multiply for no win).  Pass the
-    co-selected ``w_block`` so the slab tile term prices the tile that
-    will actually run, keeping the (w_block, k_block) pair JOINTLY inside
-    the budget rather than each fitting alone.
+    X block, the (C, k) output tile, and the double-buffered slab tile
+    stop fitting together — the co-tune is the greedy fill, capped at
+    ``k_max`` (beyond the cap the amortization has flattened and
+    compile-time variants multiply for no win).  Pallas pipelines every
+    BlockSpec operand through a *pair* of VMEM buffers, so the honest
+    per-column price of X is 16 B (2 x f64), not 8 — same for the output
+    tile; this is the model :func:`repro.analysis.preflight.plan_spmm_sell`
+    enforces.  Pass the co-selected ``w_block`` so the slab tile term
+    prices the tile that will actually run, keeping the
+    (w_block, k_block) pair JOINTLY inside the budget rather than each
+    fitting alone.
     """
     slab_tile = 2 * w_block * c * 12.0        # double-buffered cols+vals
     k = 1
     while (
         k * 2 <= k_max
-        and 8.0 * (n_cols + c) * (k * 2) + slab_tile <= vmem_budget
+        and 16.0 * (n_cols + c) * (k * 2) + slab_tile <= vmem_budget
     ):
         k *= 2
     return k
+
+
+def pick_stream_tiles(
+    c: int,
+    w_block: int = SUBLANE,
+    k_block: int = 8,
+    vmem_budget: float = VMEM_BUDGET_BYTES,
+    col_tile_max: int = 1 << 20,
+    row_tile_max: int = 64,
+) -> tuple[int, int]:
+    """Greedy (col_tile, row_tile) fill for the streaming SpMM schedule.
+
+    The out-of-VMEM path (:func:`repro.kernels.sell_core.spmm_sell_stream`)
+    keeps nothing resident but scratch: a double-buffered
+    (col_tile, k_tile) X tile (16 B/column at f64), a double-buffered
+    (w_block, C) slab tile, and a (row_tile, C, k_tile) accumulator.
+    The column tile dominates X traffic amortization (each tile is reused
+    across ``row_tile`` slices), so it is grown first to half the budget;
+    the row tile then fills what remains.  Both stay powers of two so the
+    host-side padding in the wrapper is a single static pad.
+    """
+    slab_tile = 2 * w_block * c * 12.0
+    x_col = 16.0 * max(k_block, 1)            # double-buffered X bytes/column
+    acc_row = 8.0 * c * max(k_block, 1)       # accumulator bytes per slice
+    ct = LANE
+    while (
+        ct * 2 <= col_tile_max
+        and x_col * (ct * 2) + slab_tile + acc_row <= vmem_budget / 2
+    ):
+        ct *= 2
+    rt = 1
+    while (
+        rt * 2 <= row_tile_max
+        and x_col * ct + slab_tile + acc_row * (rt * 2) <= vmem_budget
+    ):
+        rt *= 2
+    return ct, rt
 
 
 def tune_sell_layout(
@@ -226,37 +272,64 @@ def tune_sell_layout(
     if machine.max_vl > 0:
         cands = [c for c in cands if machine.supports_vl(c)] or [machine.max_vl]
     sdv = SDVMachine(machine)
-    # The x vector stays VMEM-resident for every candidate (kernel design),
-    # so it is part of each footprint; the slab tile is double-buffered
-    # (cols i32 + vals f64 = 12 B/entry) at the smallest usable W block.
-    x_resident = 8.0 * n_cols
-    rows: list[tuple[int, int, float, float]] = []
-    for c in cands:
-        if x_resident + 2 * SUBLANE * c * 12.0 > vmem_budget:
-            continue
-        seen: set[int] = set()
-        for f in sigma_factors:
-            sigma = min(max(f * c, c), max(n_rows, 1))
-            if sigma in seen:
-                continue
-            seen.add(sigma)
-            pf = measured_pad_factor(lengths, c, sigma)
-            prob = SpMVProblem(n_rows=n_rows, n_cols=n_cols, nnz=nnz, pad_factor=pf)
-            trace = spmv_trace(prob, VectorConfig(vl=c, lanes=machine.lanes))
-            rows.append((c, sigma, pf, sdv.run(trace).cycles))
+
+    def score(cands_c) -> list[tuple[int, int, float, float]]:
+        out: list[tuple[int, int, float, float]] = []
+        for c in cands_c:
+            seen: set[int] = set()
+            for f in sigma_factors:
+                sigma = min(max(f * c, c), max(n_rows, 1))
+                if sigma in seen:
+                    continue
+                seen.add(sigma)
+                pf = measured_pad_factor(lengths, c, sigma)
+                prob = SpMVProblem(
+                    n_rows=n_rows, n_cols=n_cols, nnz=nnz, pad_factor=pf)
+                trace = spmv_trace(prob, VectorConfig(vl=c, lanes=machine.lanes))
+                out.append((c, sigma, pf, sdv.run(trace).cycles))
+        return out
+
+    # On the resident schedule the x block stays pinned for every candidate
+    # (and Pallas double-buffers it: 16 B/column at f64); the slab tile is
+    # double-buffered (cols i32 + vals f64 = 12 B/entry) at the smallest
+    # usable W block.  Candidates that cannot afford that are only viable
+    # on the streaming schedule, where X residency is a (col_tile, k_tile)
+    # slice the tuner controls — so when *no* candidate fits resident, the
+    # operand is stream-only and (C, sigma) is scored without the filter.
+    x_resident = 16.0 * n_cols
+    rows = score(
+        c for c in cands if x_resident + 2 * SUBLANE * c * 12.0 <= vmem_budget
+    )
+    stream_only = not rows
+    if stream_only:
+        rows = score(cands)
     if not rows:
         raise ValueError("no (C, sigma) candidate fits the VMEM budget")
     best = min(rows, key=lambda r: r[3])
     max_w = int(lengths.max()) if n_rows else 1
-    # The tile budget is whatever the x-resident vector leaves over, so the
-    # returned triple is consistent with the candidate filter above; the
-    # RHS tile is then priced against the slab tile w_block actually
-    # claims, so (w_block, k_block) fit the budget together, not just
-    # each on its own.
+    # Resident: the tile budget is whatever the x-resident vector leaves
+    # over, so the returned triple is consistent with the candidate filter
+    # above.  Stream-only: the slab tile competes with the streamed X tile
+    # instead, which pick_w_block's default slab share models.  The RHS
+    # tile is then priced against the slab tile w_block actually claims,
+    # so (w_block, k_block) fit the budget together, not just each alone.
     w_block = pick_w_block(
         best[0], max(max_w, 1),
-        vmem_budget=max(vmem_budget - x_resident, 2 * SUBLANE * best[0] * 12.0),
+        vmem_budget=(
+            vmem_budget / 8 if stream_only
+            else max(vmem_budget - x_resident, 2 * SUBLANE * best[0] * 12.0)
+        ),
     )
+    k_block = pick_k_block(
+        best[0],
+        # Stream-only operands price X at one column tile, not n_cols.
+        min(n_cols, pick_stream_tiles(best[0], w_block)[0]) if stream_only
+        else n_cols,
+        vmem_budget=vmem_budget,
+        w_block=w_block,
+    )
+    col_tile, row_tile = pick_stream_tiles(
+        best[0], w_block, k_block, vmem_budget=vmem_budget)
     result = SellTuneResult(
         c=best[0],
         sigma=best[1],
@@ -264,8 +337,9 @@ def tune_sell_layout(
         cycles=best[3],
         pad_factor=best[2],
         table=tuple(rows),
-        k_block=pick_k_block(best[0], n_cols, vmem_budget=vmem_budget,
-                             w_block=w_block),
+        k_block=k_block,
+        col_tile=col_tile,
+        row_tile=row_tile,
     )
     if cache is not None and cache_key is not None:
         cache.put_sell(cache_key, result)

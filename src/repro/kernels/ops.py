@@ -20,8 +20,13 @@ from repro.analysis.preflight import (
     plan_fft_stockham,
     plan_pagerank_sell,
     plan_spmm_sell,
+    plan_spmm_sell_stream,
 )
-from repro.core.autotune import SellTuneResult, tune_sell_layout
+from repro.core.autotune import (
+    SellTuneResult,
+    pick_stream_tiles,
+    tune_sell_layout,
+)
 from repro.graphs.gen import EllpackGraph, graph_to_sell_slabs
 from repro.kernels import bfs as bfs_k
 from repro.kernels import fft as fft_k
@@ -102,27 +107,67 @@ def _repack_cached(matrix, vl: int, sigma: int | None, cache) -> SellSlabs:
     return slabs
 
 
+#: ops-level execution modes for the SELL SpMM core
+_SPMM_MODES = ("auto", "resident", "stream")
+
+
 def _spmm_slabs(
-    slabs: SellSlabs, x, *, w_block: int, k_block: int, interpret: bool
+    slabs: SellSlabs,
+    x,
+    *,
+    w_block: int,
+    k_block: int,
+    interpret: bool,
+    mode: str = "auto",
+    col_tile: int | None = None,
+    row_tile: int | None = None,
 ) -> jnp.ndarray:
-    # static preflight: reject contract-violating launches (VMEM budget,
-    # pow2 tiles, dtype flow) with a structured error before XLA sees them
-    plan_spmm_sell(
-        SlabMeta.from_slabs(slabs),
-        k=int(x.shape[1]),
-        x_dtype=str(x.dtype),
-        w_block=w_block,
-        k_block=k_block,
-    ).raise_if_invalid()
-    return sell_core.spmm_sell(
+    """Dispatch a slab SpMM to the resident or streaming schedule.
+
+    ``mode="auto"`` picks by footprint: resident when the static
+    :func:`plan_spmm_sell` fits :data:`repro.core.autotune.VMEM_BUDGET_BYTES`,
+    streaming otherwise.  Either schedule is preflighted (VMEM budget, pow2
+    tiles, dtype flow) with a structured error before XLA sees the launch.
+
+    Single k-padding policy (asserted here, at the ops boundary): only the
+    core pads the k axis, via :func:`repro.kernels.sell_core.padded_k`, and
+    a power-of-two k is its fixpoint — so an RHS the service already
+    pow2-padded (``service._pow2_pad``) is never padded a second time.
+    """
+    if mode not in _SPMM_MODES:
+        raise ValueError(f"unknown mode {mode!r}: expected one of {_SPMM_MODES}")
+    meta = SlabMeta.from_slabs(slabs)
+    k = int(x.shape[1])
+    # the padding-policy fixpoint: pow2 k in => identical k out of the core
+    assert sell_core.padded_k(sell_core.pow2_ceil(max(k, 1)), k_block) \
+        == sell_core.pow2_ceil(max(k, 1)), "k-padding policy drifted"
+    resident_plan = plan_spmm_sell(
+        meta, k=k, x_dtype=str(x.dtype), w_block=w_block, k_block=k_block)
+    if mode == "auto":
+        mode = "resident" if resident_plan.ok else "stream"
+    args = (
         tuple(jnp.asarray(c) for c in slabs.bucket_cols),
         tuple(jnp.asarray(v) for v in slabs.bucket_vals),
         tuple(jnp.asarray(r) for r in slabs.bucket_rows),
         jnp.asarray(x),
-        n_rows=slabs.n_rows,
-        w_block=w_block,
-        k_block=k_block,
-        interpret=interpret,
+    )
+    if mode == "resident":
+        resident_plan.raise_if_invalid()
+        return sell_core.spmm_sell(
+            *args, n_rows=slabs.n_rows, w_block=w_block, k_block=k_block,
+            interpret=interpret,
+        )
+    if col_tile is None or row_tile is None:
+        ct, rt = pick_stream_tiles(meta.c, w_block, k_block)
+        col_tile = ct if col_tile is None else col_tile
+        row_tile = rt if row_tile is None else row_tile
+    plan_spmm_sell_stream(
+        meta, k=k, x_dtype=str(x.dtype), w_block=w_block, k_block=k_block,
+        col_tile=col_tile, row_tile=row_tile,
+    ).raise_if_invalid()
+    return sell_core.spmm_sell_stream(
+        *args, n_rows=slabs.n_rows, w_block=w_block, k_block=k_block,
+        col_tile=int(col_tile), row_tile=int(row_tile), interpret=interpret,
     )
 
 
@@ -136,19 +181,30 @@ def spmm(
     k_block: int | None = None,
     interpret: bool | None = None,
     cache=None,
+    mode: str = "auto",
+    col_tile: int | None = None,
+    row_tile: int | None = None,
 ) -> jnp.ndarray:
     """Y = A @ X for stacked right-hand sides X of shape (n_cols, k).
 
     The batched core of :func:`spmv`: every supported format is normalized
     to width-bucketed SELL slabs and the whole RHS stack runs as one
-    launch set through :func:`repro.kernels.sell_core.spmm_sell`.
+    launch set through :func:`repro.kernels.sell_core.spmm_sell` (or, for
+    operands whose resident footprint exceeds the VMEM budget, the
+    out-of-VMEM :func:`repro.kernels.sell_core.spmm_sell_stream`).
     ``k_block`` (default: the power of two covering k, capped at 8 — pass
     the co-tuned :attr:`SellTuneResult.k_block` for the VMEM-fitted value)
-    tiles the RHS axis.  Returns Y of shape (n_rows, k).
+    tiles the RHS axis.  ``mode`` forces the schedule: ``"auto"``
+    (footprint-based, the default), ``"resident"``, or ``"stream"``;
+    ``col_tile``/``row_tile`` override the streaming tiles (default: the
+    co-tuned :func:`repro.core.autotune.pick_stream_tiles` fill).
+    Returns Y of shape (n_rows, k).
     """
     x = jnp.asarray(x)
     if x.ndim != 2:
         raise ValueError(f"spmm expects X of shape (n_cols, k), got {x.shape}")
+    if mode not in _SPMM_MODES:
+        raise ValueError(f"unknown mode {mode!r}: expected one of {_SPMM_MODES}")
     if k_block is None:
         k_block = min(8, sell_core.pow2_ceil(x.shape[1]))
     interpret = default_interpret() if interpret is None else interpret
@@ -160,8 +216,13 @@ def spmm(
         matrix = sell_to_slabs(matrix)
     if isinstance(matrix, SellSlabs):
         return _spmm_slabs(
-            matrix, x, w_block=w_block, k_block=k_block, interpret=interpret
+            matrix, x, w_block=w_block, k_block=k_block, interpret=interpret,
+            mode=mode, col_tile=col_tile, row_tile=row_tile,
         )
+    if mode == "stream":
+        raise ValueError(
+            "mode='stream' requires a SELL slab layout; ELLPACK operands "
+            "only run the resident uniform-width kernel")
     # uniform-width ELLPACK: run the stack column-by-column through the
     # paper-baseline kernel (the SELL slab path above is the batched one)
     cols = jnp.asarray(matrix.cols)
@@ -185,6 +246,9 @@ def spmv(
     w_block: int = 8,
     interpret: bool | None = None,
     cache=None,
+    mode: str = "auto",
+    col_tile: int | None = None,
+    row_tile: int | None = None,
 ) -> jnp.ndarray:
     """y = A @ x, dispatching the kernel that matches the matrix format.
 
@@ -200,13 +264,19 @@ def spmv(
     the layout is memoized in the TuneCache (``cache``, defaulting to the
     process-wide :func:`default_tune_cache`): repeated calls with the same
     operand reuse the repacked slabs instead of discarding the work.
+
+    ``mode``/``col_tile``/``row_tile`` select and shape the resident vs
+    streaming schedule exactly as in :func:`spmm`.
     """
     x = jnp.asarray(x)
     if x.ndim == 2:
         return spmm(
             matrix, x, vl=vl, sigma=sigma, w_block=w_block,
-            interpret=interpret, cache=cache,
+            interpret=interpret, cache=cache, mode=mode,
+            col_tile=col_tile, row_tile=row_tile,
         )
+    if mode not in _SPMM_MODES:
+        raise ValueError(f"unknown mode {mode!r}: expected one of {_SPMM_MODES}")
     interpret = default_interpret() if interpret is None else interpret
     if not isinstance(matrix, CSRMatrix) and matrix.c != vl:
         matrix = _repack_cached(matrix, vl, sigma, cache)
@@ -217,8 +287,13 @@ def spmv(
     if isinstance(matrix, SellSlabs):
         return _spmm_slabs(
             matrix, x[:, None], w_block=w_block, k_block=1,
-            interpret=interpret,
+            interpret=interpret, mode=mode, col_tile=col_tile,
+            row_tile=row_tile,
         )[:, 0]
+    if mode == "stream":
+        raise ValueError(
+            "mode='stream' requires a SELL slab layout; ELLPACK operands "
+            "only run the resident uniform-width kernel")
     y = spmv_k.spmv_ell(
         jnp.asarray(matrix.cols),
         jnp.asarray(matrix.vals),

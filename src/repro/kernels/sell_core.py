@@ -12,15 +12,25 @@ is the single device-execution core every SELL-layout kernel drives:
   :func:`repro.core.autotune.tune_sell_layout`) as a third grid axis, so a
   whole coalesced request group runs as ONE launch set instead of a Python
   loop of per-request calls.
+* :func:`spmm_sell_stream` — the same contraction for operands that do NOT
+  fit VMEM whole: slabs, ``X`` and ``Y`` stay HBM-resident (``ANY`` memory
+  space) and the kernel hand-pipelines (column-tile x k-tile x w-block)
+  working sets through VMEM scratch with double-buffered async copies —
+  tile t+1 is in flight while tile t computes.  This is the paper's
+  latency-tolerance thesis at production sizes: many independent element
+  streams hide the HBM round-trip, so one node hosts million-row operands.
 * :func:`bucketed_node_step` — the shared per-bucket launch + scatter loop
   of the graph kernels: BFS and PageRank supply only their combine kernels
   (frontier test, damped pull-sum) and their per-step state as stacked
   (n + 1, k) columns; the slice/scatter plumbing that used to be duplicated
   in ``kernels/bfs.py`` and ``kernels/pagerank.py`` lives here once.
 
-Both entry points keep the SELL contract of :mod:`repro.kernels.sell`:
+Both SpMM entry points keep the SELL contract of :mod:`repro.kernels.sell`:
 every real row/node appears in exactly one bucket, padding lanes scatter
-into a dump slot (index ``n``) that drivers trim.
+into a dump slot (index ``n``) that drivers trim — and they share one RHS
+padding policy (:func:`k_tile_for` / :func:`padded_k`): the k axis is
+padded at most once, to the k tile one grid cell processes, and a stack
+whose k is already a power of two is never re-padded.
 """
 from __future__ import annotations
 
@@ -30,12 +40,48 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.sparse.formats import pow2_ceil
 
 PAD = -1
 
-__all__ = ["PAD", "bucketed_node_step", "pow2_ceil", "spmm_sell"]
+__all__ = [
+    "PAD",
+    "bucketed_node_step",
+    "k_tile_for",
+    "padded_k",
+    "pow2_ceil",
+    "spmm_sell",
+    "spmm_sell_stream",
+]
+
+
+# ---------------------------------------------------------------------------
+# The one RHS padding policy (shared by resident and streaming paths)
+# ---------------------------------------------------------------------------
+
+
+def k_tile_for(k: int, k_block: int) -> int:
+    """The RHS tile one grid cell processes: ``min(k_block, pow2_ceil(k))``.
+
+    Both powers of two, so the tile always divides ``pow2_ceil(k)`` — which
+    is the single-padding guarantee: a caller that pow2-pads its stack
+    (the service's ``_pow2_pad``) hands the core a k the core never pads
+    again (:func:`padded_k` is the identity on powers of two).
+    """
+    return min(max(int(k_block), 1), pow2_ceil(max(int(k), 1)))
+
+
+def padded_k(k: int, k_block: int) -> int:
+    """The k the core actually runs: ``k`` rounded up to the k tile.
+
+    ``padded_k(pow2, k_block) == pow2`` for every pow2/k_block pair — the
+    ops boundary asserts this fixpoint so the pow2 padding applied by the
+    service and the tile padding applied here can never stack.
+    """
+    kp = k_tile_for(k, k_block)
+    return kp * -(-max(int(k), 1) // kp)
 
 
 # ---------------------------------------------------------------------------
@@ -122,15 +168,24 @@ def spmm_sell(
     """Y = A @ X over width-bucketed SELL slabs; X is (n_cols, k).
 
     Returns Y of shape (n_rows, k).  ``k_block`` caps the RHS tile: the k
-    axis is padded internally to the pow2 tile one grid cell processes.
+    axis is padded internally to the pow2 tile one grid cell processes —
+    **at most once** (the shared policy of :func:`k_tile_for`): a stack
+    whose k is already a power of two (the service's ``_pow2_pad`` output)
+    is a fixpoint of :func:`padded_k` and is never re-padded here, so the
+    service-side pow2 pad and the core-side tile pad can never stack.
     Note that jit still specializes on the *incoming* (n_cols, k) shape —
     callers serving variable group sizes should pow2-pad their RHS stack
-    first (the service's ``_pow2_pad``) so group sizes share log2 compiled
-    programs.  k = 1 reproduces the old ``spmv_sell`` schedule bit for bit
-    (same tiles, one RHS lane).
+    first so group sizes share log2 compiled programs.  k = 1 reproduces
+    the old ``spmv_sell`` schedule bit for bit (same tiles, one RHS lane).
+
+    Every grid cell maps the whole (n_cols, k_tile) RHS block into VMEM —
+    the *resident* schedule.  Operands whose RHS block (double-buffered by
+    the pipeline) would blow the VMEM budget belong to
+    :func:`spmm_sell_stream`; ``ops.spmm`` dispatches on the static
+    preflight plan.
     """
     k = x.shape[1]
-    kp = min(max(int(k_block), 1), pow2_ceil(k))
+    kp = k_tile_for(k, k_block)
     if k % kp:
         x = jnp.pad(x, ((0, 0), (0, kp - k % kp)))
     dtype = bucket_vals[0].dtype if bucket_vals else x.dtype
@@ -138,6 +193,214 @@ def spmm_sell(
     for cols, vals, rows in zip(bucket_cols, bucket_vals, bucket_rows):
         yb = _spmm_bucket(
             cols, vals, x, w_block=w_block, k_tile=kp, interpret=interpret
+        )
+        y = y.at[rows.reshape(-1)].set(yb)
+    return y[:n_rows, :k]
+
+
+# ---------------------------------------------------------------------------
+# Out-of-VMEM streaming SpMM: double-buffered tile pipeline
+# ---------------------------------------------------------------------------
+
+
+def _spmm_stream_kernel(cols_ref, vals_ref, x_ref, y_ref,
+                        cbuf, vbuf, xbuf, yacc, csem, vsem, xsem, ysem,
+                        *, row_tile, w_block, col_tile, k_tile, n_w, n_ct):
+    """One (row-tile, k-tile) grid cell of the streaming schedule.
+
+    Every ref lives in ``ANY`` (HBM); the cell owns four VMEM scratch
+    buffers — double-buffered slab tiles (``cbuf``/``vbuf``), a
+    double-buffered (col_tile, k_tile) RHS tile (``xbuf``) and the
+    (row_tile, C, k_tile) output accumulator (``yacc``) — and hand-rolls
+    the pipeline: while step g computes, the DMAs for step g+1 are already
+    in flight (and the next column tile of X prefetches as the current one
+    starts its last slab pass), so the HBM round-trip hides behind the
+    gather-MAC exactly as the paper's latency-tolerance argument says it
+    should.  Step order is (col-tile, slice, w-block) innermost-last: one
+    X tile is reused across every slice of the row tile before the next
+    tile streams in, amortizing the dominant X traffic ``row_tile``-fold.
+    """
+    i = pl.program_id(0)
+    kk = pl.program_id(1)
+    base_s = i * row_tile
+    steps_per_tile = row_tile * n_w              # slab steps per X tile
+    n_steps = n_ct * steps_per_tile
+
+    def x_dma(slot, t):
+        return pltpu.make_async_copy(
+            x_ref.at[pl.ds(t * col_tile, col_tile),
+                     pl.ds(kk * k_tile, k_tile)],
+            xbuf.at[slot], xsem.at[slot])
+
+    def c_dma(slot, s, j):
+        return pltpu.make_async_copy(
+            cols_ref.at[base_s + s, pl.ds(j * w_block, w_block), :],
+            cbuf.at[slot], csem.at[slot])
+
+    def v_dma(slot, s, j):
+        return pltpu.make_async_copy(
+            vals_ref.at[base_s + s, pl.ds(j * w_block, w_block), :],
+            vbuf.at[slot], vsem.at[slot])
+
+    yacc[...] = jnp.zeros_like(yacc)
+    x_dma(0, 0).start()                          # warm the pipeline
+    c_dma(0, 0, 0).start()
+    v_dma(0, 0, 0).start()
+
+    def body(g, _):
+        t = g // steps_per_tile                  # X column tile
+        q = g % steps_per_tile
+        s = q // n_w                             # slice within the row tile
+        j = q % n_w                              # w-block within the slice
+        xslot = t % 2
+        slot = g % 2
+
+        @pl.when(q == 0)
+        def _wait_x():                           # first touch of X tile t
+            x_dma(xslot, t).wait()
+
+        @pl.when((q == 0) & (t + 1 < n_ct))
+        def _prefetch_x():                       # overlap tile t+1's copy
+            x_dma((t + 1) % 2, t + 1).start()    # with ALL of tile t's work
+
+        @pl.when(g + 1 < n_steps)
+        def _prefetch_slab():                    # next slab tile in flight
+            q1 = (g + 1) % steps_per_tile        # while this one computes
+            c_dma((g + 1) % 2, q1 // n_w, q1 % n_w).start()
+            v_dma((g + 1) % 2, q1 // n_w, q1 % n_w).start()
+
+        c_dma(slot, s, j).wait()
+        v_dma(slot, s, j).wait()
+
+        cols = cbuf[slot]                        # (w_block, C) int32
+        vals = vbuf[slot]
+        lo = t * col_tile
+        local = cols - lo
+        # PAD (-1) can never land in a tile: lo >= 0 makes cols >= lo false
+        mask = (cols >= lo) & (local < col_tile)
+        safe = jnp.where(mask, local, 0)
+        gathered = xbuf[xslot][safe]             # (w_block, C, k_tile)
+        contrib = jnp.sum(
+            jnp.where(mask[..., None], vals[..., None] * gathered, 0.0),
+            axis=0)                              # (C, k_tile)
+        yacc[pl.ds(s, 1)] += contrib[None].astype(yacc.dtype)
+        return _
+
+    jax.lax.fori_loop(0, n_steps, body, None)
+    out = pltpu.make_async_copy(
+        yacc,
+        y_ref.at[pl.ds(base_s, row_tile), :, pl.ds(kk * k_tile, k_tile)],
+        ysem)
+    out.start()
+    out.wait()
+
+
+def _spmm_bucket_stream(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    w_block: int,
+    k_tile: int,
+    col_tile: int,
+    row_tile: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    """One bucket of the streaming schedule: nothing resident but scratch.
+
+    ``x`` arrives already padded by the caller — k to a multiple of
+    ``k_tile`` and n_cols to a multiple of ``col_tile`` (zero rows, which
+    no stored index can reach) — so every DMA moves a full static tile.
+    Slices are padded to a multiple of ``row_tile`` with PAD-only slabs
+    whose accumulators stay zero and are trimmed before the scatter.
+    """
+    n_slices, width, c = cols.shape
+    k = x.shape[1]
+    w_block = min(w_block, width)
+    if width % w_block:
+        pad = w_block - width % w_block
+        cols = jnp.pad(cols, ((0, 0), (0, pad), (0, 0)), constant_values=PAD)
+        vals = jnp.pad(vals, ((0, 0), (0, pad), (0, 0)))
+        width += pad
+    row_tile = min(row_tile, n_slices)
+    s_pad = -n_slices % row_tile
+    if s_pad:
+        cols = jnp.pad(cols, ((0, s_pad), (0, 0), (0, 0)),
+                       constant_values=PAD)
+        vals = jnp.pad(vals, ((0, s_pad), (0, 0), (0, 0)))
+    grid = ((n_slices + s_pad) // row_tile, k // k_tile)
+    kernel = functools.partial(
+        _spmm_stream_kernel, row_tile=row_tile, w_block=w_block,
+        col_tile=col_tile, k_tile=k_tile, n_w=width // w_block,
+        n_ct=x.shape[0] // col_tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 3,
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((n_slices + s_pad, c, k), vals.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, w_block, c), cols.dtype),     # slab cols x2
+            pltpu.VMEM((2, w_block, c), vals.dtype),     # slab vals x2
+            pltpu.VMEM((2, col_tile, k_tile), x.dtype),  # RHS tile x2
+            pltpu.VMEM((row_tile, c, k_tile), vals.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+        interpret=interpret,
+    )(cols, vals, x)
+    return out[:n_slices].reshape(n_slices * c, k)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows", "w_block", "k_block", "col_tile", "row_tile",
+                     "interpret"),
+)
+def spmm_sell_stream(
+    bucket_cols: tuple[jnp.ndarray, ...],
+    bucket_vals: tuple[jnp.ndarray, ...],
+    bucket_rows: tuple[jnp.ndarray, ...],
+    x: jnp.ndarray,
+    *,
+    n_rows: int,
+    w_block: int = 8,
+    k_block: int = 8,
+    col_tile: int = 1 << 16,
+    row_tile: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Y = A @ X with HBM-resident operands: the out-of-VMEM schedule.
+
+    Same contract and same results as :func:`spmm_sell` (bit-exact: the
+    per-row contraction order is identical — w-blocks ascending within each
+    slice, and the column-tile split only reorders *masked-out* zeros), but
+    nothing is VMEM-resident: slabs, X and Y live in ``ANY`` memory and the
+    kernel double-buffers (col_tile x k_tile) RHS tiles and (w_block, C)
+    slab tiles through scratch, with a row-tile outer grid axis so slabs
+    too large for VMEM stream too.  ``col_tile``/``row_tile`` are co-tuned
+    by :func:`repro.core.autotune.pick_stream_tiles` and persisted in the
+    TuneCache next to (C, sigma, w_block, k_block).
+
+    The k axis follows the same single-padding policy as the resident path
+    (:func:`padded_k`); the n_cols axis is padded to a ``col_tile``
+    multiple with zero rows no stored index reaches.
+    """
+    k = x.shape[1]
+    kp = k_tile_for(k, k_block)
+    if k % kp:
+        x = jnp.pad(x, ((0, 0), (0, kp - k % kp)))
+    ct = min(pow2_ceil(max(int(col_tile), 1)), pow2_ceil(x.shape[0]))
+    if x.shape[0] % ct:
+        x = jnp.pad(x, ((0, ct - x.shape[0] % ct), (0, 0)))
+    dtype = bucket_vals[0].dtype if bucket_vals else x.dtype
+    y = jnp.zeros((n_rows + 1, x.shape[1]), dtype)  # +1 dump slot for pads
+    for cols, vals, rows in zip(bucket_cols, bucket_vals, bucket_rows):
+        yb = _spmm_bucket_stream(
+            cols, vals, x, w_block=w_block, k_tile=kp, col_tile=ct,
+            row_tile=max(int(row_tile), 1), interpret=interpret,
         )
         y = y.at[rows.reshape(-1)].set(yb)
     return y[:n_rows, :k]

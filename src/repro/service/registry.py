@@ -22,6 +22,7 @@ from repro.analysis.preflight import (
     plan_fft_stockham,
     plan_pagerank_sell,
     plan_spmm_sell,
+    plan_spmm_sell_stream,
 )
 from repro.core.autotune import SellTuneResult
 from repro.core.sdv import MachineParams, tpu_v5e_machine
@@ -54,6 +55,10 @@ class RegisteredOperand:
     launches: int = 0                       # batched core launches served
     slab_meta: Any = None                   # SlabMeta (bounds-scanned) | None
     plans: dict = dataclasses.field(default_factory=dict)  # op -> LaunchPlan
+    #: execution schedule the operand registered on: "resident" when its
+    #: footprint fits the VMEM budget, "stream" (the out-of-VMEM
+    #: double-buffered pipeline) when the resident plan honestly rejects it
+    mode: str = "resident"
 
     @property
     def pad_factor(self) -> float:
@@ -131,11 +136,26 @@ class KernelRegistry:
         # corrupt pack or a stale/poisoned cached tune is rejected here
         # with a structured LaunchPlanError, never served
         op.slab_meta = SlabMeta.from_slabs(slabs, check_bounds=True)
-        op.plans = {"spmv": plan_spmm_sell(
+        resident = plan_spmm_sell(
             op.slab_meta, k=max(1, tuned.k_block),
             x_dtype=str(csr.data.dtype),
             w_block=tuned.w_block, k_block=tuned.k_block,
-        ).raise_if_invalid()}
+        )
+        if resident.ok:
+            op.plans = {"spmv": resident}
+        else:
+            # A giant operand the resident plan honestly rejects registers
+            # on the streaming schedule instead — no resident copy is ever
+            # materialized.  The streaming plan still enforces every other
+            # contract (pow2 tiles, dtype flow, scratch budget), so a
+            # poisoned/stale cached tune is rejected here exactly as before.
+            op.mode = "stream"
+            op.plans = {"spmv": plan_spmm_sell_stream(
+                op.slab_meta, k=max(1, tuned.k_block),
+                x_dtype=str(csr.data.dtype),
+                w_block=tuned.w_block, k_block=tuned.k_block,
+                col_tile=tuned.col_tile, row_tile=tuned.row_tile,
+            ).raise_if_invalid()}
         op.device_arrays = _matrix_device_arrays(slabs)
         return self._admit(op, t0)
 

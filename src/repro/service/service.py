@@ -42,6 +42,7 @@ from repro.analysis.preflight import (
     plan_fft_stockham,
     plan_pagerank_sell,
     plan_spmm_sell,
+    plan_spmm_sell_stream,
 )
 from repro.service.registry import KernelRegistry, RegisteredOperand
 from repro.serve.slots import SlotLoop
@@ -59,7 +60,13 @@ def _pow2_pad(items: list) -> list:
     """Pad a request-column list to the next power of two by repeating the
     last element.  The padding columns compute throwaway results; what they
     buy is a bounded set of compiled batch shapes (k in {1, 2, 4, ...})
-    across arbitrary coalesced group sizes."""
+    across arbitrary coalesced group sizes.
+
+    Single k-padding policy: this is the ONLY padding the service applies,
+    and a power-of-two k is a fixpoint of the core's
+    :func:`repro.kernels.sell_core.padded_k` — so the group's columns are
+    never padded a second time inside ``spmm_sell``/``spmm_sell_stream``
+    (asserted at the ops boundary, ``ops._spmm_slabs``)."""
     from repro.kernels.sell_core import pow2_ceil
 
     return items + [items[-1]] * (pow2_ceil(len(items)) - len(items))
@@ -107,7 +114,7 @@ class KernelService(SlotLoop[KernelRequest]):
         self.stats = {
             "submitted": 0, "served": 0, "failed": 0, "rejected": 0,
             "steps": 0, "groups": 0, "coalesced": 0, "max_group": 0,
-            "launches": 0, "preflight_rejected": 0,
+            "launches": 0, "preflight_rejected": 0, "streamed_launches": 0,
         }
 
     # -- async API ---------------------------------------------------------
@@ -201,10 +208,17 @@ class KernelService(SlotLoop[KernelRequest]):
         plans: dict[str, LaunchPlan] = {}
         if record.kind == "matrix" and record.slab_meta is not None:
             tuned = record.tuned
-            plans["spmv"] = plan_spmm_sell(
-                record.slab_meta, k=max(1, tuned.k_block),
-                x_dtype=record.slab_meta.val_dtype,
-                w_block=tuned.w_block, k_block=tuned.k_block)
+            if record.mode == "stream":
+                plans["spmv"] = plan_spmm_sell_stream(
+                    record.slab_meta, k=max(1, tuned.k_block),
+                    x_dtype=record.slab_meta.val_dtype,
+                    w_block=tuned.w_block, k_block=tuned.k_block,
+                    col_tile=tuned.col_tile, row_tile=tuned.row_tile)
+            else:
+                plans["spmv"] = plan_spmm_sell(
+                    record.slab_meta, k=max(1, tuned.k_block),
+                    x_dtype=record.slab_meta.val_dtype,
+                    w_block=tuned.w_block, k_block=tuned.k_block)
         elif record.kind == "graph" and record.slab_meta is not None:
             # worst case: a full coalesced group, pow2-padded
             k = pow2_ceil(max(1, self.n_slots))
@@ -297,8 +311,11 @@ class KernelService(SlotLoop[KernelRequest]):
         return good, payloads
 
     def _run_spmv(self, operand, reqs):
-        """The whole group is ONE spmm_sell launch: request vectors become
-        RHS columns of the batched SELL core."""
+        """The whole group is ONE batched core launch: request vectors
+        become RHS columns.  Operands registered on the streaming schedule
+        (``mode == "stream"`` — resident footprint over the VMEM budget)
+        run the out-of-VMEM ``spmm_sell_stream`` pipeline instead, counted
+        in ``stats['streamed_launches']``."""
         from repro.kernels import sell_core
 
         if operand.kind != "matrix":
@@ -322,12 +339,21 @@ class KernelService(SlotLoop[KernelRequest]):
         # pow2-pad the RHS stack BEFORE the jitted core: jax.jit keys on
         # the pre-pad (n_cols, k) shape, so without this every distinct
         # group size would trace its own program (see _pow2_pad)
-        y = sell_core.spmm_sell(
-            arrs["cols"], arrs["vals"], arrs["rows"],
-            jnp.asarray(np.stack(_pow2_pad(xs), axis=1)),
-            n_rows=operand.n, w_block=tuned.w_block, k_block=tuned.k_block,
-            interpret=self.interpret,
-        )
+        x_stack = jnp.asarray(np.stack(_pow2_pad(xs), axis=1))
+        if operand.mode == "stream":
+            y = sell_core.spmm_sell_stream(
+                arrs["cols"], arrs["vals"], arrs["rows"], x_stack,
+                n_rows=operand.n, w_block=tuned.w_block,
+                k_block=tuned.k_block, col_tile=tuned.col_tile,
+                row_tile=tuned.row_tile, interpret=self.interpret,
+            )
+            self.stats["streamed_launches"] += 1
+        else:
+            y = sell_core.spmm_sell(
+                arrs["cols"], arrs["vals"], arrs["rows"], x_stack,
+                n_rows=operand.n, w_block=tuned.w_block,
+                k_block=tuned.k_block, interpret=self.interpret,
+            )
         self._count_launch(operand)
         y = np.asarray(y)
         for i, req in enumerate(good):

@@ -197,6 +197,7 @@ def _result_to_json(r: SellTuneResult) -> dict:
     return {
         "c": int(r.c), "sigma": int(r.sigma), "w_block": int(r.w_block),
         "k_block": int(r.k_block),
+        "col_tile": int(r.col_tile), "row_tile": int(r.row_tile),
         "cycles": float(r.cycles), "pad_factor": float(r.pad_factor),
         "table": [[int(c), int(s), float(pf), float(cy)]
                   for c, s, pf, cy in r.table],
@@ -208,6 +209,10 @@ def _result_from_json(d: Mapping) -> SellTuneResult:
         c=int(d["c"]), sigma=int(d["sigma"]), w_block=int(d["w_block"]),
         # entries persisted before the multi-RHS core keep a working default
         k_block=int(d.get("k_block", 8)),
+        # entries persisted before the out-of-VMEM streaming path keep the
+        # dataclass's conservative streaming-tile defaults
+        col_tile=int(d.get("col_tile", SellTuneResult.col_tile)),
+        row_tile=int(d.get("row_tile", SellTuneResult.row_tile)),
         cycles=float(d["cycles"]), pad_factor=float(d["pad_factor"]),
         table=tuple((int(c), int(s), float(pf), float(cy))
                     for c, s, pf, cy in d["table"]),
