@@ -38,7 +38,12 @@ TIME_METRICS = ("us_per_call", "p50_us", "p95_us", "p99_us",
 #: row: it staying 0 proves the resident preflight still rejects operands
 #: the streaming path exists for (1 would mean the honest-footprint model
 #: regressed, and any increase from a 0 base fails the gate).
-METRICS = TIME_METRICS + ("pad_factor", "rejected", "resident_plan_accepted")
+#: ``mismatch`` is the zero-base counter on the sharded-execution rows
+#: (BENCH_sharded.json): 1 means the multi-device result drifted beyond
+#: 1e-10 from single-device execution — a numerical regression fails the
+#: gate even when every timing is within tolerance.
+METRICS = TIME_METRICS + ("pad_factor", "rejected", "resident_plan_accepted",
+                          "mismatch")
 
 
 def load(path: str) -> dict:

@@ -31,6 +31,7 @@ def _self_check_plans(out=sys.stdout) -> int:
         plan_fft_stockham,
         plan_pagerank_sell,
         plan_spmm_sell,
+        plan_spmm_sell_sharded,
         plan_spmm_sell_stream,
     )
     from repro.graphs.gen import graph_to_sell_slabs, random_graph
@@ -45,6 +46,8 @@ def _self_check_plans(out=sys.stdout) -> int:
         plan_spmm_sell(mat, k=1, x_dtype="float64"),
         plan_spmm_sell(mat, k=8, x_dtype="float64"),
         plan_spmm_sell_stream(mat, k=8, x_dtype="float64"),
+        plan_spmm_sell_sharded(mat, k=8, x_dtype="float64", n_devices=4,
+                               window_cols=1024),
         plan_bfs_sell(gm, k=8),
         plan_pagerank_sell(gm, k=8),
         plan_fft_stockham(n=1024, batch=32),

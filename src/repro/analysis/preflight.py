@@ -46,6 +46,7 @@ __all__ = [
     "plan_fft_stockham",
     "plan_pagerank_sell",
     "plan_spmm_sell",
+    "plan_spmm_sell_sharded",
     "plan_spmm_sell_stream",
 ]
 
@@ -203,6 +204,102 @@ def plan_spmm_sell(
         ))
     return LaunchPlan(
         kernel="spmm_sell", operand=meta.describe(), dtype=val_dtype,
+        vmem_budget=int(vmem_budget), blocks=tuple(blocks),
+        violations=tuple(violations),
+    )
+
+
+def plan_spmm_sell_sharded(
+    meta: SlabMeta,
+    k: int = 1,
+    x_dtype: str | None = None,
+    *,
+    n_devices: int = 1,
+    w_block: int = 8,
+    k_block: int = 8,
+    window_cols: int | None = None,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> LaunchPlan:
+    """Plan the row-sharded ``spmm_sell_sharded`` launch across devices.
+
+    Per device the launch is the resident bucket schedule of
+    :func:`plan_spmm_sell` on roughly ``1/n_devices`` of the slices, with
+    one decisive difference: the RHS block a device keeps VMEM-resident is
+    its ``window_cols``-wide boundary-column gather, not the full
+    ``n_cols`` — row partitioning shrinks the X term, which is exactly why
+    an operand the single-device resident plan rejects can be *accepted*
+    sharded.  The plan also prices the collective volume as a zero-VMEM
+    pseudo-block: the replicated X broadcast each device reads
+    (``window_cols x k_pad``) and the disjoint output rows it contributes
+    to the host concatenation (``~n_rows/n_devices x k_pad``) — the wire
+    budget a scaling sweep should watch, not a VMEM contract.
+    """
+    violations: list[str] = []
+    nd = int(n_devices)
+    if nd < 1:
+        violations.append(f"n_devices must be >= 1, got {n_devices}")
+        nd = 1
+    if not is_pow2(w_block):
+        violations.append(f"w_block {w_block} is not a power of two")
+    if not is_pow2(k_block):
+        violations.append(f"k_block {k_block} is not a power of two")
+    if k < 1:
+        violations.append(f"RHS stack must have k >= 1 columns, got {k}")
+    win = int(window_cols) if window_cols is not None else meta.n_cols
+    if win < 1 or win > max(meta.n_cols, 1):
+        violations.append(
+            f"window_cols {win} outside [1, n_cols={meta.n_cols}]")
+    _shared_slab_contracts(meta, violations)
+    val_dtype = meta.val_dtype or "float64"
+    vb = _dtype_bytes(val_dtype)
+    if x_dtype is not None:
+        if not np.issubdtype(np.dtype(x_dtype), np.floating):
+            violations.append(f"RHS dtype {x_dtype} is not floating")
+        elif meta.val_dtype is not None and x_dtype != meta.val_dtype:
+            violations.append(
+                f"RHS dtype {x_dtype} != slab value dtype {meta.val_dtype}")
+    k_tile = min(max(int(k_block), 1), pow2_ceil(max(k, 1)))
+    k_pad = k_tile * math.ceil(max(k, 1) / k_tile)
+    xb = _dtype_bytes(x_dtype) if x_dtype is not None else vb
+    blocks = []
+    for i, (s, w) in enumerate(zip(meta.n_slices, meta.widths)):
+        s_dev = math.ceil(max(s, 1) / nd)        # slices on the busiest shard
+        w_eff = min(max(int(w_block), 1), w)
+        w_pad = w_eff * math.ceil(w / w_eff)
+        grid = (s_dev, k_pad // k_tile, w_pad // w_eff)
+        footprint = (
+            2 * w_eff * meta.c * (vb + _IDX_BYTES)   # double-buffered slab tile
+            + 2 * win * k_tile * xb                  # windowed RHS block pair
+            + 2 * meta.c * k_tile * vb               # pipelined output pair
+        )
+        if footprint > vmem_budget:
+            violations.append(
+                f"bucket {i} (W={w}): per-device footprint {footprint} B "
+                f"exceeds VMEM budget {vmem_budget} B (n_devices={nd}, "
+                f"window_cols={win}, w_block={w_block}, k_block={k_block})")
+        blocks.append(BlockPlan(
+            label=f"bucket{i}[W={w}]/dev",
+            grid=grid,
+            blocks=(
+                ("cols", (1, w_eff, meta.c), meta.idx_dtype),
+                ("vals", (1, w_eff, meta.c), val_dtype),
+                ("x_window", (win, k_tile), x_dtype or val_dtype),
+                ("y", (1, meta.c, k_tile), val_dtype),
+            ),
+            vmem_bytes=footprint,
+        ))
+    rows_dev = math.ceil(max(meta.n_rows, 1) / nd)
+    blocks.append(BlockPlan(
+        label="collectives",
+        grid=(nd,),
+        blocks=(
+            ("x_broadcast", (win, k_pad), x_dtype or val_dtype),
+            ("y_gather", (rows_dev, k_pad), val_dtype),
+        ),
+        vmem_bytes=0,                            # wire volume, not VMEM
+    ))
+    return LaunchPlan(
+        kernel="spmm_sell_sharded", operand=meta.describe(), dtype=val_dtype,
         vmem_budget=int(vmem_budget), blocks=tuple(blocks),
         violations=tuple(violations),
     )

@@ -240,6 +240,7 @@ def tune_sell_layout(
     vmem_budget: float = VMEM_BUDGET_BYTES,
     cache=None,
     cache_key: str | None = None,
+    n_devices: int = 1,
 ) -> SellTuneResult:
     """Co-select (C, sigma, w_block) for the SELL SpMV kernel.
 
@@ -253,6 +254,14 @@ def tune_sell_layout(
     the cache is consulted *before* any pad factor is measured, so a warm
     entry makes this call free, and a miss records its result for the next
     process.
+
+    ``n_devices > 1`` tunes for the row-sharded launch: the layout each
+    device executes is packed from its own row slice, so the tuner scores
+    the *busiest shard* (largest nnz under the same balanced partition
+    :func:`repro.sparse.formats.shard_row_ranges` produces) — that shard
+    sets the critical path of the SPMD launch.  Callers must key the cache
+    with the matching device count (``TuneCache.sell_key(n_devices=...)``)
+    so sharded and single-device tunes never alias.
     """
     if cache is not None and cache_key is not None:
         hit = cache.get_sell(cache_key)
@@ -260,6 +269,13 @@ def tune_sell_layout(
             return hit
     machine = machine or tpu_v5e_machine()
     lengths = np.asarray(row_lengths, np.int64)
+    if int(n_devices) > 1 and len(lengths):
+        from repro.sparse.formats import shard_row_ranges
+
+        ranges = shard_row_ranges(lengths, int(n_devices))
+        lo, hi = max(
+            ranges, key=lambda r: int(lengths[r[0]:r[1]].sum()))
+        lengths = lengths[lo:hi]
     n_rows = len(lengths)
     nnz = int(lengths.sum())
     n_cols = int(n_cols if n_cols is not None else n_rows)

@@ -1,0 +1,142 @@
+"""One frozen execution spec for every public kernel entry point.
+
+PRs 2-7 grew the ``ops.*`` surface one keyword at a time: ``mode=`` and the
+stream tiles landed with the out-of-VMEM path, ``layout=`` with the graph
+drivers, ``cache=`` with the serving protocol.  Sweeping configurations
+reproducibly (the RAVE / EPCC methodology the paper's scaling study leans
+on) needs those knobs in ONE hashable structure that rides unchanged
+through ops -> autotune -> registry -> service.  That structure is
+:class:`ExecSpec`.
+
+The old kwargs keep working as deprecated aliases: every legacy keyword
+maps onto the matching ``ExecSpec`` field, emits a single
+``DeprecationWarning`` naming the migration, and produces bit-identical
+results (``tests/test_execspec.py`` asserts alias == spec).  Passing both
+``spec=`` and a legacy keyword is an error rather than a silent merge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+
+class _Unset:
+    """Sentinel distinguishing 'not passed' from an explicit None."""
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:  # pragma: no cover - repr only
+        return "<unset>"
+
+
+_UNSET = _Unset()
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """Placement-aware launch configuration for the SELL kernel family.
+
+    Field defaults reproduce the historical per-function defaults exactly,
+    so ``ExecSpec()`` is always a safe stand-in for "no kwargs".
+
+    layout:    graph operand layout, ``"ell"`` or ``"sell"`` (bfs/pagerank).
+    mode:      SpMM dispatch, ``"auto"`` | ``"resident"`` | ``"stream"``.
+    placement: device placement — ``None`` (single device), an ``int``
+               device count (a 1-D mesh over the first N visible devices),
+               or a ``Mesh`` / ``MeshContext``.
+    vl:        SELL slice height C, the effective vector length.
+    sigma:     sorting-window height (``None`` -> the packer default 8*C).
+    w_block:   width-tile for the resident bucket kernels.
+    k_block:   RHS column tile for SpMM (``None`` -> pow2 heuristic).
+    col_tile:  streamed-SpMM column window (``None`` -> autotuned).
+    row_tile:  streamed-SpMM slice-row block (``None`` -> autotuned).
+    b_block:   FFT butterfly-block tile.
+    interpret: Pallas interpret mode (``None`` -> backend default).
+    cache:     a ``TuneCache`` (``None`` -> the process-default cache).
+    """
+
+    layout: str = "ell"
+    mode: str = "auto"
+    placement: Any = None
+    vl: int = 256
+    sigma: int | None = None
+    w_block: int = 8
+    k_block: int | None = None
+    col_tile: int | None = None
+    row_tile: int | None = None
+    b_block: int = 8
+    interpret: bool | None = None
+    cache: Any = None
+
+    @classmethod
+    def resolve(cls, spec: "ExecSpec | None" = None, *, _caller: str = "ops",
+                **legacy) -> "ExecSpec":
+        """Fold deprecated per-function kwargs into one ``ExecSpec``.
+
+        ``legacy`` values equal to ``_UNSET`` were not passed by the
+        caller.  Explicit legacy kwargs are deprecated-but-honoured and
+        may not be combined with ``spec=``.
+        """
+        passed = {k: v for k, v in legacy.items() if v is not _UNSET}
+        if spec is not None:
+            if passed:
+                raise ValueError(
+                    f"{_caller}: pass either spec= or the legacy kwargs "
+                    f"{sorted(passed)}, not both")
+            if not isinstance(spec, cls):
+                raise TypeError(
+                    f"{_caller}: spec must be an ExecSpec, got {type(spec)!r}")
+            return spec
+        if passed:
+            names = ", ".join(f"{k}=" for k in sorted(passed))
+            warnings.warn(
+                f"{_caller}: keyword arguments {names} are deprecated; "
+                f"pass spec=ExecSpec({names}...) instead",
+                DeprecationWarning, stacklevel=3)
+            return cls(**passed)
+        return cls()
+
+    # -- placement ---------------------------------------------------------
+
+    def resolved_placement(self):
+        """The placement as a ``MeshContext`` (null context for None)."""
+        from repro.compat import MeshContext
+
+        p = self.placement
+        if p is None:
+            return MeshContext(None)
+        if isinstance(p, MeshContext):
+            return p
+        if isinstance(p, int):
+            from repro.kernels.sell_shard import device_mesh
+
+            return device_mesh(p)
+        return MeshContext(p)
+
+    def n_devices(self) -> int:
+        """Device count implied by the placement (1 when unplaced)."""
+        p = self.placement
+        if p is None:
+            return 1
+        if isinstance(p, int):
+            return max(1, p)
+        ctx = self.resolved_placement()
+        mesh = ctx.mesh
+        return int(mesh.size) if mesh is not None else 1
+
+    def coalesce_key(self) -> tuple:
+        """Hashable identity for service coalescing groups.
+
+        Excludes ``cache`` (process-local object identity, not execution
+        semantics) and collapses ``placement`` to its device count so that
+        equal meshes coalesce.
+        """
+        return (
+            self.layout, self.mode, self.n_devices(), self.vl, self.sigma,
+            self.w_block, self.k_block, self.col_tile, self.row_tile,
+            self.b_block, self.interpret,
+        )
+
+
+__all__ = ["ExecSpec", "_UNSET"]

@@ -20,6 +20,7 @@ from repro.analysis.preflight import (
     plan_fft_stockham,
     plan_pagerank_sell,
     plan_spmm_sell,
+    plan_spmm_sell_sharded,
     plan_spmm_sell_stream,
 )
 from repro.core.autotune import (
@@ -27,12 +28,13 @@ from repro.core.autotune import (
     pick_stream_tiles,
     tune_sell_layout,
 )
-from repro.graphs.gen import EllpackGraph, graph_to_sell_slabs
+from repro.graphs.gen import EllpackGraph, graph_to_sell_slabs, shard_graph_slabs
 from repro.kernels import bfs as bfs_k
 from repro.kernels import fft as fft_k
 from repro.kernels import pagerank as pr_k
-from repro.kernels import sell_core
+from repro.kernels import sell_core, sell_shard
 from repro.kernels import spmv as spmv_k
+from repro.kernels.execspec import _UNSET, ExecSpec
 from repro.kernels.ref import fft_twiddles
 from repro.sparse.formats import (
     CSRMatrix,
@@ -41,6 +43,7 @@ from repro.sparse.formats import (
     SellSlabs,
     csr_to_sell_slabs,
     sell_to_slabs,
+    shard_slabs,
     to_csr,
 )
 
@@ -107,6 +110,55 @@ def _repack_cached(matrix, vl: int, sigma: int | None, cache) -> SellSlabs:
     return slabs
 
 
+def _shard_cached(slabs: SellSlabs, n_shards: int, cache):
+    """Row-partition slabs for a device mesh, memoized like repacks.
+
+    Sharding is O(nnz) (CSR round trip + per-shard repack), so the result
+    is memoized in the TuneCache's packed-layout LRU keyed by content
+    signature + shard count — the same pay-once protocol as
+    :func:`_repack_cached`.
+    """
+    from repro.service.tunecache import operand_signature
+
+    cache = cache if cache is not None else default_tune_cache()
+    sig = operand_signature(slabs)
+    key = ("shard", sig.key, slabs.c, int(slabs.sigma or 0), int(n_shards))
+    sharded = cache.packed_get(key)
+    if sharded is None:
+        sharded = shard_slabs(slabs, n_shards)
+        cache.packed_put(key, sharded)
+    return sharded
+
+
+def _shard_graph_cached(rgraph: EllpackGraph, vl: int, sigma: int | None,
+                        n_shards: int, cache):
+    """Node-partitioned graph slabs for a device mesh, memoized (see
+    :func:`_shard_cached`)."""
+    from repro.service.tunecache import operand_signature
+
+    cache = cache if cache is not None else default_tune_cache()
+    sig = operand_signature(rgraph)
+    key = ("shard-graph", sig.key, int(vl), int(sigma or 0), int(n_shards))
+    sg = cache.packed_get(key)
+    if sg is None:
+        sg = shard_graph_slabs(rgraph, c=vl, n_shards=n_shards, sigma=sigma)
+        cache.packed_put(key, sg)
+    return sg
+
+
+def _sharded_graph_meta(sg) -> SlabMeta:
+    """Per-device :class:`SlabMeta` of sharded graph slabs: every device
+    executes ``slices_per_shard`` slices of each union bucket against the
+    full replicated state, which is exactly what the single-device
+    ``plan_bfs_sell``/``plan_pagerank_sell`` price."""
+    return SlabMeta(
+        kind="graph", c=sg.c, widths=sg.widths,
+        n_slices=sg.slices_per_shard, n_rows=sg.n_nodes, n_cols=sg.n_nodes,
+        val_dtype=None, idx_dtype=str(sg.bucket_adj[0].dtype)
+        if sg.bucket_adj else "int32",
+    )
+
+
 #: ops-level execution modes for the SELL SpMM core
 _SPMM_MODES = ("auto", "resident", "stream")
 
@@ -171,19 +223,79 @@ def _spmm_slabs(
     )
 
 
+def _spmm_sharded(
+    slabs: SellSlabs,
+    x: jnp.ndarray,
+    spec: ExecSpec,
+    *,
+    k_block: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    """Dispatch a slab SpMM across the spec's device mesh.
+
+    Two shard axes, picked by the RHS width: when the padded k covers at
+    least one full k tile *per device* (k >> k_block), the RHS columns
+    shard and the operand replicates (:func:`sell_shard.spmm_sell_rhs_sharded`
+    — no collectives); otherwise the rows shard
+    (:func:`sell_shard.spmm_sell_sharded` — boundary-column gather, disjoint
+    output concatenation).  Both paths preflight their per-device plan.
+    """
+    if spec.mode == "stream":
+        raise ValueError(
+            "mode='stream' and a multi-device placement cannot combine: "
+            "the streaming schedule is a single-device out-of-VMEM "
+            "pipeline; drop the placement or use mode='auto'")
+    ndev = spec.n_devices()
+    mesh = spec.resolved_placement()
+    k = int(x.shape[1])
+    kp = sell_core.k_tile_for(k, k_block)
+    meta = SlabMeta.from_slabs(slabs)
+    if sell_core.padded_k(k, k_block) >= ndev * kp:
+        # every device gets >= 1 whole RHS tile: shard k, replicate A
+        plan_spmm_sell(
+            meta, k=max(1, -(-k // ndev)), x_dtype=str(x.dtype),
+            w_block=spec.w_block, k_block=k_block,
+        ).raise_if_invalid()
+        return sell_shard.spmm_sell_rhs_sharded(
+            slabs, x, mesh=mesh, w_block=spec.w_block, k_block=k_block,
+            interpret=interpret)
+    sharded = _shard_cached(slabs, ndev, spec.cache)
+    plan_spmm_sell_sharded(
+        meta, k=k, x_dtype=str(x.dtype), n_devices=ndev,
+        w_block=spec.w_block, k_block=k_block,
+        window_cols=sharded.window_cols,
+    ).raise_if_invalid()
+    return sell_shard.spmm_sell_sharded(
+        sharded, x, mesh=mesh, w_block=spec.w_block, k_block=k_block,
+        interpret=interpret)
+
+
+def _normalize_matrix(matrix, spec: ExecSpec):
+    """Normalize any supported matrix format toward SELL slabs at the
+    spec's (vl, sigma) — repack-on-mismatch memoized through the cache."""
+    if not isinstance(matrix, CSRMatrix) and matrix.c != spec.vl:
+        matrix = _repack_cached(matrix, spec.vl, spec.sigma, spec.cache)
+    if isinstance(matrix, CSRMatrix):
+        matrix = csr_to_sell_slabs(matrix, c=spec.vl, sigma=spec.sigma)
+    if isinstance(matrix, SellCSigmaMatrix):
+        matrix = sell_to_slabs(matrix)
+    return matrix
+
+
 def spmm(
     matrix: CSRMatrix | EllpackMatrix | SellCSigmaMatrix | SellSlabs,
     x: np.ndarray | jnp.ndarray,
     *,
-    vl: int = 256,
-    sigma: int | None = None,
-    w_block: int = 8,
-    k_block: int | None = None,
-    interpret: bool | None = None,
-    cache=None,
-    mode: str = "auto",
-    col_tile: int | None = None,
-    row_tile: int | None = None,
+    spec: ExecSpec | None = None,
+    vl=_UNSET,
+    sigma=_UNSET,
+    w_block=_UNSET,
+    k_block=_UNSET,
+    interpret=_UNSET,
+    cache=_UNSET,
+    mode=_UNSET,
+    col_tile=_UNSET,
+    row_tile=_UNSET,
 ) -> jnp.ndarray:
     """Y = A @ X for stacked right-hand sides X of shape (n_cols, k).
 
@@ -192,34 +304,45 @@ def spmm(
     launch set through :func:`repro.kernels.sell_core.spmm_sell` (or, for
     operands whose resident footprint exceeds the VMEM budget, the
     out-of-VMEM :func:`repro.kernels.sell_core.spmm_sell_stream`).
-    ``k_block`` (default: the power of two covering k, capped at 8 — pass
-    the co-tuned :attr:`SellTuneResult.k_block` for the VMEM-fitted value)
-    tiles the RHS axis.  ``mode`` forces the schedule: ``"auto"``
-    (footprint-based, the default), ``"resident"``, or ``"stream"``;
-    ``col_tile``/``row_tile`` override the streaming tiles (default: the
-    co-tuned :func:`repro.core.autotune.pick_stream_tiles` fill).
     Returns Y of shape (n_rows, k).
+
+    Configuration arrives as one :class:`~repro.kernels.execspec.ExecSpec`
+    (``spec=``).  ``spec.k_block`` defaults to the power of two covering
+    k, capped at 8 — pass the co-tuned :attr:`SellTuneResult.k_block` for
+    the VMEM-fitted value.  ``spec.mode`` forces the schedule (``"auto"`` /
+    ``"resident"`` / ``"stream"``); ``spec.col_tile``/``row_tile`` override
+    the streaming tiles.  A multi-device ``spec.placement`` runs the
+    sharded executors (RHS-sharded when k >> k_block, row-sharded
+    otherwise).  The bare keywords are deprecated aliases for the matching
+    spec fields (one ``DeprecationWarning``, identical results).
     """
+    spec = ExecSpec.resolve(
+        spec, _caller="ops.spmm", vl=vl, sigma=sigma, w_block=w_block,
+        k_block=k_block, interpret=interpret, cache=cache, mode=mode,
+        col_tile=col_tile, row_tile=row_tile)
     x = jnp.asarray(x)
     if x.ndim != 2:
         raise ValueError(f"spmm expects X of shape (n_cols, k), got {x.shape}")
-    if mode not in _SPMM_MODES:
-        raise ValueError(f"unknown mode {mode!r}: expected one of {_SPMM_MODES}")
-    if k_block is None:
-        k_block = min(8, sell_core.pow2_ceil(x.shape[1]))
-    interpret = default_interpret() if interpret is None else interpret
-    if not isinstance(matrix, CSRMatrix) and matrix.c != vl:
-        matrix = _repack_cached(matrix, vl, sigma, cache)
-    if isinstance(matrix, CSRMatrix):
-        matrix = csr_to_sell_slabs(matrix, c=vl, sigma=sigma)
-    if isinstance(matrix, SellCSigmaMatrix):
-        matrix = sell_to_slabs(matrix)
+    if spec.mode not in _SPMM_MODES:
+        raise ValueError(
+            f"unknown mode {spec.mode!r}: expected one of {_SPMM_MODES}")
+    kb = spec.k_block if spec.k_block is not None \
+        else min(8, sell_core.pow2_ceil(x.shape[1]))
+    interp = default_interpret() if spec.interpret is None else spec.interpret
+    matrix = _normalize_matrix(matrix, spec)
     if isinstance(matrix, SellSlabs):
+        if spec.n_devices() > 1:
+            return _spmm_sharded(matrix, x, spec, k_block=kb,
+                                 interpret=interp)
         return _spmm_slabs(
-            matrix, x, w_block=w_block, k_block=k_block, interpret=interpret,
-            mode=mode, col_tile=col_tile, row_tile=row_tile,
+            matrix, x, w_block=spec.w_block, k_block=kb, interpret=interp,
+            mode=spec.mode, col_tile=spec.col_tile, row_tile=spec.row_tile,
         )
-    if mode == "stream":
+    if spec.n_devices() > 1:
+        raise ValueError(
+            "multi-device placement requires a SELL slab layout; ELLPACK "
+            "operands only run the single-device uniform-width kernel")
+    if spec.mode == "stream":
         raise ValueError(
             "mode='stream' requires a SELL slab layout; ELLPACK operands "
             "only run the resident uniform-width kernel")
@@ -230,7 +353,7 @@ def spmm(
     ys = [
         spmv_k.spmv_ell(
             cols, vals, x[:, i],
-            w_block=min(w_block, matrix.width), interpret=interpret,
+            w_block=min(spec.w_block, matrix.width), interpret=interp,
         )[: matrix.n_rows]
         for i in range(x.shape[1])
     ]
@@ -241,56 +364,65 @@ def spmv(
     matrix: CSRMatrix | EllpackMatrix | SellCSigmaMatrix | SellSlabs,
     x: np.ndarray | jnp.ndarray,
     *,
-    vl: int = 256,
-    sigma: int | None = None,
-    w_block: int = 8,
-    interpret: bool | None = None,
-    cache=None,
-    mode: str = "auto",
-    col_tile: int | None = None,
-    row_tile: int | None = None,
+    spec: ExecSpec | None = None,
+    vl=_UNSET,
+    sigma=_UNSET,
+    w_block=_UNSET,
+    interpret=_UNSET,
+    cache=_UNSET,
+    mode=_UNSET,
+    col_tile=_UNSET,
+    row_tile=_UNSET,
 ) -> jnp.ndarray:
     """y = A @ x, dispatching the kernel that matches the matrix format.
 
     * :class:`CSRMatrix` — packed to width-bucketed SELL slabs at slice
-      width ``vl`` (sigma defaults to 8*vl) and run bucket-by-bucket;
+      width ``spec.vl`` (sigma defaults to 8*vl) and run bucket-by-bucket;
     * :class:`SellSlabs` / :class:`SellCSigmaMatrix` — bucketed kernel;
     * :class:`EllpackMatrix` — the uniform-width kernel.
 
     ``x`` may be a single (n_cols,) vector or a stacked (n_cols, k) RHS
     matrix; the latter dispatches to :func:`spmm` and returns (n_rows, k).
 
-    A pre-packed matrix whose C disagrees with ``vl`` is repacked once and
-    the layout is memoized in the TuneCache (``cache``, defaulting to the
-    process-wide :func:`default_tune_cache`): repeated calls with the same
-    operand reuse the repacked slabs instead of discarding the work.
+    A pre-packed matrix whose C disagrees with ``spec.vl`` is repacked once
+    and the layout is memoized in the TuneCache (``spec.cache``, defaulting
+    to the process-wide :func:`default_tune_cache`): repeated calls with
+    the same operand reuse the repacked slabs instead of discarding the
+    work.
 
-    ``mode``/``col_tile``/``row_tile`` select and shape the resident vs
-    streaming schedule exactly as in :func:`spmm`.
+    All launch knobs ride on ``spec=`` (one
+    :class:`~repro.kernels.execspec.ExecSpec`): ``mode``/``col_tile``/
+    ``row_tile`` select and shape the resident vs streaming schedule
+    exactly as in :func:`spmm`, and a multi-device ``placement`` runs the
+    row-sharded executor.  The bare keywords are deprecated aliases
+    (warning emitted, identical results).
     """
+    spec = ExecSpec.resolve(
+        spec, _caller="ops.spmv", vl=vl, sigma=sigma, w_block=w_block,
+        interpret=interpret, cache=cache, mode=mode, col_tile=col_tile,
+        row_tile=row_tile)
     x = jnp.asarray(x)
     if x.ndim == 2:
-        return spmm(
-            matrix, x, vl=vl, sigma=sigma, w_block=w_block,
-            interpret=interpret, cache=cache, mode=mode,
-            col_tile=col_tile, row_tile=row_tile,
-        )
-    if mode not in _SPMM_MODES:
-        raise ValueError(f"unknown mode {mode!r}: expected one of {_SPMM_MODES}")
-    interpret = default_interpret() if interpret is None else interpret
-    if not isinstance(matrix, CSRMatrix) and matrix.c != vl:
-        matrix = _repack_cached(matrix, vl, sigma, cache)
-    if isinstance(matrix, CSRMatrix):
-        matrix = csr_to_sell_slabs(matrix, c=vl, sigma=sigma)
-    if isinstance(matrix, SellCSigmaMatrix):
-        matrix = sell_to_slabs(matrix)
+        return spmm(matrix, x, spec=spec)
+    if spec.mode not in _SPMM_MODES:
+        raise ValueError(
+            f"unknown mode {spec.mode!r}: expected one of {_SPMM_MODES}")
+    interp = default_interpret() if spec.interpret is None else spec.interpret
+    matrix = _normalize_matrix(matrix, spec)
     if isinstance(matrix, SellSlabs):
+        if spec.n_devices() > 1:
+            return _spmm_sharded(
+                matrix, x[:, None], spec, k_block=1, interpret=interp)[:, 0]
         return _spmm_slabs(
-            matrix, x[:, None], w_block=w_block, k_block=1,
-            interpret=interpret, mode=mode, col_tile=col_tile,
-            row_tile=row_tile,
+            matrix, x[:, None], w_block=spec.w_block, k_block=1,
+            interpret=interp, mode=spec.mode, col_tile=spec.col_tile,
+            row_tile=spec.row_tile,
         )[:, 0]
-    if mode == "stream":
+    if spec.n_devices() > 1:
+        raise ValueError(
+            "multi-device placement requires a SELL slab layout; ELLPACK "
+            "operands only run the single-device uniform-width kernel")
+    if spec.mode == "stream":
         raise ValueError(
             "mode='stream' requires a SELL slab layout; ELLPACK operands "
             "only run the resident uniform-width kernel")
@@ -298,15 +430,15 @@ def spmv(
         jnp.asarray(matrix.cols),
         jnp.asarray(matrix.vals),
         x,
-        w_block=min(w_block, matrix.width),
-        interpret=interpret,
+        w_block=min(spec.w_block, matrix.width),
+        interpret=interp,
     )
     return y[: matrix.n_rows]
 
 
 def pack_tuned(
     matrix: CSRMatrix, machine=None, cache=None, device: str | None = None,
-    candidates_c=None, signature=None,
+    candidates_c=None, signature=None, n_devices: int = 1,
 ) -> tuple[SellSlabs, SellTuneResult]:
     """Autotune (C, sigma, w_block) for this matrix and pack it.
 
@@ -335,18 +467,20 @@ def pack_tuned(
         machine = machine if machine is not None else tpu_v5e_machine()
         base_key = cache.sell_key(
             "spmv", signature if signature is not None else matrix,
-            device=device, dtype=str(matrix.data.dtype), machine=machine)
+            device=device, dtype=str(matrix.data.dtype), machine=machine,
+            n_devices=n_devices)
     return tune_and_pack(
         matrix.row_lengths,
         lambda t: csr_to_sell_slabs(matrix, c=t.c, sigma=t.sigma),
         n_cols=matrix.n_cols, machine=machine,
         candidates_c=candidates_c, cache=cache, base_key=base_key,
+        n_devices=n_devices,
     )
 
 
 def cached_tune_sell(
     row_lengths, n_cols=None, machine=None, candidates_c=None,
-    cache=None, base_key: str | None = None,
+    cache=None, base_key: str | None = None, n_devices: int = 1,
 ) -> SellTuneResult:
     """The one cached-tune protocol (shared by :func:`pack_tuned` and the
     service registry's graph path).
@@ -367,12 +501,13 @@ def cached_tune_sell(
     return tune_sell_layout(
         row_lengths, n_cols=n_cols, machine=machine,
         candidates_c=candidates_c, cache=cache, cache_key=key,
+        n_devices=n_devices,
     )
 
 
 def tune_and_pack(
     row_lengths, pack_fn, n_cols=None, machine=None, candidates_c=None,
-    cache=None, base_key: str | None = None,
+    cache=None, base_key: str | None = None, n_devices: int = 1,
 ):
     """Cached tune + memoized pack — the full serving protocol, shared by
     :func:`pack_tuned` (matrices) and the registry's graph path.
@@ -385,6 +520,7 @@ def tune_and_pack(
     tuned = cached_tune_sell(
         row_lengths, n_cols=n_cols, machine=machine,
         candidates_c=candidates_c, cache=cache, base_key=base_key,
+        n_devices=n_devices,
     )
     if cache is not None and base_key is not None:
         packed_key = (base_key, tuned.c, tuned.sigma)
@@ -405,10 +541,23 @@ def fft(
     signal_re: np.ndarray | jnp.ndarray,
     signal_im: np.ndarray | jnp.ndarray | None = None,
     *,
-    b_block: int = 8,
-    interpret: bool | None = None,
+    spec: ExecSpec | None = None,
+    b_block=_UNSET,
+    interpret=_UNSET,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Batched FFT of (batch, n) split-plane signals (n power of two)."""
+    """Batched FFT of (batch, n) split-plane signals (n power of two).
+
+    Configuration rides on ``spec=`` (``b_block``, ``interpret``); the bare
+    keywords are deprecated aliases.  FFT has no sharded execution path —
+    a multi-device ``spec.placement`` is rejected rather than silently run
+    on one device.
+    """
+    spec = ExecSpec.resolve(
+        spec, _caller="ops.fft", b_block=b_block, interpret=interpret)
+    if spec.n_devices() > 1:
+        raise ValueError(
+            "fft has no sharded execution path; use a single-device "
+            "placement")
     re = jnp.atleast_2d(jnp.asarray(signal_re))
     im = (
         jnp.zeros_like(re)
@@ -418,14 +567,14 @@ def fft(
     n = re.shape[-1]
     if n & (n - 1):
         raise ValueError(f"n must be a power of two, got {n}")
-    interpret = default_interpret() if interpret is None else interpret
+    interp = default_interpret() if spec.interpret is None else spec.interpret
     wre, wim = fft_twiddles(n, re.dtype)
-    b_block = min(b_block, re.shape[0])
+    bb = min(spec.b_block, re.shape[0])
     plan_fft_stockham(
-        int(n), batch=int(re.shape[0]), b_block=int(b_block),
+        int(n), batch=int(re.shape[0]), b_block=int(bb),
         dtype=str(re.dtype),
     ).raise_if_invalid()
-    return fft_k.fft_stockham(re, im, wre, wim, b_block=b_block, interpret=interpret)
+    return fft_k.fft_stockham(re, im, wre, wim, b_block=bb, interpret=interp)
 
 
 # ---------------------------------------------------------------------------
@@ -437,46 +586,70 @@ def bfs(
     graph: EllpackGraph,
     source=0,
     *,
-    vl: int = 256,
-    sigma: int | None = None,
-    layout: str = "ell",
-    interpret: bool | None = None,
+    spec: ExecSpec | None = None,
+    vl=_UNSET,
+    sigma=_UNSET,
+    layout=_UNSET,
+    interpret=_UNSET,
 ) -> np.ndarray:
     """BFS distances from ``source`` (INF = unreachable).
 
-    ``layout="sell"`` runs the width-bucketed kernel over in-degree-sorted
-    adjacency slabs: skewed-degree graphs stop paying the global max
-    in-degree per node.
+    ``spec.layout = "sell"`` runs the width-bucketed kernel over
+    in-degree-sorted adjacency slabs: skewed-degree graphs stop paying the
+    global max in-degree per node.
 
     ``source`` may be one node id or a sequence of k ids.  A sequence
     returns stacked (n_nodes, k) distances, one column per source; on the
     SELL layout the whole stack advances through one launch set per level
     (the multi-RHS batched core), on ELLPACK the sources run one by one.
+
+    A multi-device ``spec.placement`` (SELL layout only) node-partitions
+    the reverse adjacency and unions per-device frontiers with ``pmin``
+    every level — results are identical to the single-device drive at any
+    device count.  The bare keywords are deprecated aliases for the
+    matching spec fields.
     """
-    if layout not in ("ell", "sell"):
-        raise ValueError(f"unknown layout {layout!r}: expected 'ell' or 'sell'")
-    interpret = default_interpret() if interpret is None else interpret
+    spec = ExecSpec.resolve(
+        spec, _caller="ops.bfs", vl=vl, sigma=sigma, layout=layout,
+        interpret=interpret)
+    if spec.layout not in ("ell", "sell"):
+        raise ValueError(
+            f"unknown layout {spec.layout!r}: expected 'ell' or 'sell'")
+    interp = default_interpret() if spec.interpret is None else spec.interpret
     n = graph.n_nodes
     # Bottom-up expansion needs *in*-neighbors: a node joins the frontier if
     # one of the nodes that point AT it was reached last level.
     rgraph = graph.transpose()
-    if layout == "sell":
-        slabs = graph_to_sell_slabs(rgraph, c=vl, sigma=sigma)
+    if spec.n_devices() > 1:
+        if spec.layout != "sell":
+            raise ValueError(
+                "multi-device placement requires layout='sell' (the "
+                "ELLPACK drive has no sharded path)")
+        sg = _shard_graph_cached(
+            rgraph, spec.vl, spec.sigma, spec.n_devices(), spec.cache)
+        plan_bfs_sell(
+            _sharded_graph_meta(sg), k=int(np.size(source)),
+        ).raise_if_invalid()
+        dist = sell_shard.bfs_sell_sharded(
+            sg, source, mesh=spec.resolved_placement(), interpret=interp)
+        return np.asarray(dist)
+    if spec.layout == "sell":
+        slabs = graph_to_sell_slabs(rgraph, c=spec.vl, sigma=spec.sigma)
         plan_bfs_sell(
             SlabMeta.from_slabs(slabs), k=int(np.size(source)),
         ).raise_if_invalid()
         dist = bfs_k.bfs_sell(
             tuple(jnp.asarray(a) for a in slabs.bucket_adj),
             tuple(jnp.asarray(m) for m in slabs.bucket_nodes),
-            n, source, interpret=interpret,
+            n, source, interpret=interp,
         )
         return np.asarray(dist)
     radj = jnp.asarray(rgraph.adj)            # bfs_step auto-pads to vl
     if np.ndim(source) == 0:
         return np.asarray(
-            bfs_k.bfs(radj, source, vl=vl, interpret=interpret))
+            bfs_k.bfs(radj, source, vl=spec.vl, interpret=interp))
     return np.stack(
-        [np.asarray(bfs_k.bfs(radj, int(s), vl=vl, interpret=interpret))
+        [np.asarray(bfs_k.bfs(radj, int(s), vl=spec.vl, interpret=interp))
          for s in np.asarray(source)], axis=1)
 
 
@@ -490,27 +663,57 @@ def pagerank(
     *,
     damping=0.85,
     iters=20,
-    vl: int = 256,
-    sigma: int | None = None,
-    layout: str = "ell",
-    interpret: bool | None = None,
+    spec: ExecSpec | None = None,
+    vl=_UNSET,
+    sigma=_UNSET,
+    layout=_UNSET,
+    interpret=_UNSET,
 ) -> np.ndarray:
     """PageRank scores via the pull-style kernel on the reverse graph.
 
-    ``layout="sell"`` uses in-degree-sorted, width-bucketed reverse
+    ``spec.layout = "sell"`` uses in-degree-sorted, width-bucketed reverse
     adjacency (see :func:`bfs`).
 
     ``damping`` / ``iters`` may be scalars or sequences (broadcast against
     each other): sequences return stacked (n_nodes, k) ranks, one column
     per configuration; on the SELL layout every power step is one launch
     set for all k columns, on ELLPACK the configurations run one by one.
+
+    A multi-device ``spec.placement`` (SELL layout only) node-partitions
+    the reverse adjacency; every power step each device scatters the new
+    ranks of its owned nodes and the cross-device ``psum`` assembles the
+    replicated iterate — the rank exchange.  Bare layout keywords are
+    deprecated aliases for the matching spec fields.
     """
-    if layout not in ("ell", "sell"):
-        raise ValueError(f"unknown layout {layout!r}: expected 'ell' or 'sell'")
-    interpret = default_interpret() if interpret is None else interpret
+    spec = ExecSpec.resolve(
+        spec, _caller="ops.pagerank", vl=vl, sigma=sigma, layout=layout,
+        interpret=interpret)
+    if spec.layout not in ("ell", "sell"):
+        raise ValueError(
+            f"unknown layout {spec.layout!r}: expected 'ell' or 'sell'")
+    interp = default_interpret() if spec.interpret is None else spec.interpret
     n = graph.n_nodes
-    if layout == "sell":
-        slabs = graph_to_sell_slabs(graph.transpose(), c=vl, sigma=sigma)
+    if spec.n_devices() > 1:
+        if spec.layout != "sell":
+            raise ValueError(
+                "multi-device placement requires layout='sell' (the "
+                "ELLPACK drive has no sharded path)")
+        sg = _shard_graph_cached(
+            graph.transpose(), spec.vl, spec.sigma, spec.n_devices(),
+            spec.cache)
+        plan_pagerank_sell(
+            _sharded_graph_meta(sg),
+            k=max(int(np.size(damping)), int(np.size(iters))),
+        ).raise_if_invalid()
+        rank = sell_shard.pagerank_sell_sharded(
+            sg, jnp.asarray(graph.out_degree.astype(np.float64)),
+            mesh=spec.resolved_placement(), damping=damping, iters=iters,
+            interpret=interp,
+        )
+        return np.asarray(rank)
+    if spec.layout == "sell":
+        slabs = graph_to_sell_slabs(
+            graph.transpose(), c=spec.vl, sigma=spec.sigma)
         plan_pagerank_sell(
             SlabMeta.from_slabs(slabs),
             k=max(int(np.size(damping)), int(np.size(iters))),
@@ -519,22 +722,22 @@ def pagerank(
             tuple(jnp.asarray(a) for a in slabs.bucket_adj),
             tuple(jnp.asarray(m) for m in slabs.bucket_nodes),
             jnp.asarray(graph.out_degree.astype(np.float64)),
-            n, damping=damping, iters=iters, interpret=interpret,
+            n, damping=damping, iters=iters, interpret=interp,
         )
         return np.asarray(rank)
     radj = jnp.asarray(graph.transpose().adj)  # pagerank_step auto-pads
     deg = jnp.asarray(graph.out_degree.astype(np.float64))
     if np.ndim(damping) == 0 and np.ndim(iters) == 0:
         rank = pr_k.pagerank(
-            radj, deg, damping=damping, iters=iters, vl=vl,
-            interpret=interpret,
+            radj, deg, damping=damping, iters=iters, vl=spec.vl,
+            interpret=interp,
         )
         return np.asarray(rank[:n])
     dampings, iters_arr = pr_k.broadcast_configs(damping, iters)
     cols = [
         np.asarray(pr_k.pagerank(
-            radj, deg, damping=float(d), iters=int(it), vl=vl,
-            interpret=interpret,
+            radj, deg, damping=float(d), iters=int(it), vl=spec.vl,
+            interpret=interp,
         )[:n])
         for d, it in zip(dampings, iters_arr)
     ]

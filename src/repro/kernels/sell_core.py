@@ -52,6 +52,7 @@ __all__ = [
     "k_tile_for",
     "padded_k",
     "pow2_ceil",
+    "spmm_bucket",
     "spmm_sell",
     "spmm_sell_stream",
 ]
@@ -149,6 +150,29 @@ def _spmm_bucket(
         interpret=interpret,
     )(cols, vals, x)
     return out.reshape(n_slices * c, k)
+
+
+def spmm_bucket(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    w_block: int,
+    k_tile: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    """Public handle on the per-bucket resident launch.
+
+    The sharded executor (:mod:`repro.kernels.sell_shard`) drives buckets
+    one at a time inside a ``shard_map`` body — each device runs this same
+    program over its own slab block — so the single-bucket contraction is
+    part of the core's contract, not an implementation detail.  ``x``'s k
+    axis must already be a ``k_tile`` multiple (the caller owns the
+    :func:`padded_k` policy).
+    """
+    return _spmm_bucket(
+        cols, vals, x, w_block=w_block, k_tile=k_tile, interpret=interpret
+    )
 
 
 @functools.partial(

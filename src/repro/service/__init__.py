@@ -8,7 +8,13 @@ The layer that makes the paper kernels callable as a system: operands
 the LM batcher.  See README "Serving the kernels".
 """
 from repro.service.registry import KernelRegistry, RegisteredOperand
-from repro.service.service import KernelRequest, KernelService, QueueFull
+from repro.service.service import (
+    STATS_KEYS,
+    KernelRequest,
+    KernelService,
+    QueueFull,
+    SubmitRequest,
+)
 from repro.service.tunecache import (
     OperandSignature,
     SchemaVersionError,
@@ -23,7 +29,9 @@ __all__ = [
     "OperandSignature",
     "QueueFull",
     "RegisteredOperand",
+    "STATS_KEYS",
     "SchemaVersionError",
+    "SubmitRequest",
     "TuneCache",
     "operand_signature",
 ]

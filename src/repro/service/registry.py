@@ -22,6 +22,7 @@ from repro.analysis.preflight import (
     plan_fft_stockham,
     plan_pagerank_sell,
     plan_spmm_sell,
+    plan_spmm_sell_sharded,
     plan_spmm_sell_stream,
 )
 from repro.core.autotune import SellTuneResult
@@ -57,8 +58,12 @@ class RegisteredOperand:
     plans: dict = dataclasses.field(default_factory=dict)  # op -> LaunchPlan
     #: execution schedule the operand registered on: "resident" when its
     #: footprint fits the VMEM budget, "stream" (the out-of-VMEM
-    #: double-buffered pipeline) when the resident plan honestly rejects it
+    #: double-buffered pipeline) when the resident plan honestly rejects it,
+    #: "sharded" when the registry carries a multi-device mesh
     mode: str = "resident"
+    #: the device-partitioned layout (ShardedSlabs / ShardedGraphSlabs)
+    #: when the registry carries a multi-device mesh, else None
+    sharded: Any = None
 
     @property
     def pad_factor(self) -> float:
@@ -70,7 +75,8 @@ class KernelRegistry:
 
     def __init__(self, cache: TuneCache | None = None,
                  machine: MachineParams | None = None,
-                 device: str | None = None):
+                 device: str | None = None,
+                 mesh=None):
         if device is None:
             import jax
 
@@ -80,6 +86,18 @@ class KernelRegistry:
         # name the machine the tune actually scored against
         self.machine = machine if machine is not None else tpu_v5e_machine()
         self.device = device
+        # mesh placement: None (single device), an int device count, or a
+        # Mesh / MeshContext — resolved once through the same ExecSpec
+        # machinery the ops layer uses, so registry and ops agree on what a
+        # placement means.  Every operand registered while the mesh is
+        # multi-device is packed into its sharded layout at registration
+        # (mode "sharded"), and the tune scores the busiest shard under a
+        # device-count-qualified cache key.
+        from repro.kernels.execspec import ExecSpec
+
+        _placement = ExecSpec(placement=mesh)
+        self.mesh = _placement.resolved_placement()
+        self.n_devices = _placement.n_devices()
         self._operands: dict[str, RegisteredOperand] = {}
 
     # -- lookup ------------------------------------------------------------
@@ -125,6 +143,7 @@ class KernelRegistry:
             candidates_c=self.cache.candidate_vls_for(
                 "spmv", self.machine.name),
             signature=sig,                 # skip the second content hash
+            n_devices=self.n_devices,
         )
         op = RegisteredOperand(
             name=name, kind="matrix", signature=sig, tuned=tuned,
@@ -136,6 +155,20 @@ class KernelRegistry:
         # corrupt pack or a stale/poisoned cached tune is rejected here
         # with a structured LaunchPlanError, never served
         op.slab_meta = SlabMeta.from_slabs(slabs, check_bounds=True)
+        if self.n_devices > 1:
+            from repro.sparse.formats import shard_slabs
+
+            op.sharded = shard_slabs(slabs, self.n_devices)
+            op.mode = "sharded"
+            op.plans = {"spmv": plan_spmm_sell_sharded(
+                op.slab_meta, k=max(1, tuned.k_block),
+                x_dtype=str(csr.data.dtype),
+                n_devices=self.n_devices,
+                w_block=tuned.w_block, k_block=tuned.k_block,
+                window_cols=op.sharded.window_cols,
+            ).raise_if_invalid()}
+            op.device_arrays = _matrix_device_arrays(slabs)
+            return self._admit(op, t0)
         resident = plan_spmm_sell(
             op.slab_meta, k=max(1, tuned.k_block),
             x_dtype=str(csr.data.dtype),
@@ -195,6 +228,17 @@ class KernelRegistry:
             tune_was_cached=self.cache.hits > before,
         )
         op.slab_meta = SlabMeta.from_slabs(slabs, check_bounds=True)
+        if self.n_devices > 1:
+            from repro.graphs.gen import shard_graph_slabs
+            from repro.kernels.ops import _sharded_graph_meta
+
+            op.sharded = shard_graph_slabs(
+                rgraph, c=tuned.c, n_shards=self.n_devices,
+                sigma=tuned.sigma)
+            op.mode = "sharded"
+            # per-device plan: each device runs slices_per_shard slices of
+            # every union bucket against the full replicated state
+            op.slab_meta = _sharded_graph_meta(op.sharded)
         op.plans = {
             "bfs": plan_bfs_sell(op.slab_meta).raise_if_invalid(),
             "pagerank": plan_pagerank_sell(op.slab_meta).raise_if_invalid(),

@@ -42,13 +42,34 @@ from repro.analysis.preflight import (
     plan_fft_stockham,
     plan_pagerank_sell,
     plan_spmm_sell,
+    plan_spmm_sell_sharded,
     plan_spmm_sell_stream,
 )
+from repro.kernels.execspec import ExecSpec
 from repro.service.registry import KernelRegistry, RegisteredOperand
 from repro.serve.slots import SlotLoop
 from repro.sparse.formats import pow2_ceil
 
 OPS = ("spmv", "bfs", "pagerank", "fft")
+
+#: FROZEN contract: the exact key set of ``KernelService.stats``.  These
+#: names are observability API — dashboards and the bench gate
+#: (``scripts/bench_compare.py`` zero-base counters) key on them, so
+#: renaming or removing one is a breaking change; additions append here.
+STATS_KEYS = (
+    "submitted",            # requests admitted (post-preflight)
+    "served",               # requests retired with a result
+    "failed",               # requests retired with an error
+    "rejected",             # submits refused by QueueFull backpressure
+    "steps",                # scheduler rounds executed
+    "groups",               # coalesced (op, operand, spec) groups formed
+    "coalesced",            # requests that shared a group with >= 1 other
+    "max_group",            # largest group size seen
+    "launches",             # batched core launches (one per group)
+    "preflight_rejected",   # submits refused by a LaunchPlan violation
+    "streamed_launches",    # launches on the out-of-VMEM streaming path
+    "sharded_launches",     # launches on the multi-device sharded path
+)
 
 
 class QueueFull(RuntimeError):
@@ -73,12 +94,31 @@ def _pow2_pad(items: list) -> list:
 
 
 @dataclasses.dataclass
+class SubmitRequest:
+    """Typed submission: the one structure admission reads end to end.
+
+    ``KernelService.submit`` accepts this in place of the positional
+    ``(op, operand, payload, **params)`` spelling; the attached
+    :class:`~repro.kernels.execspec.ExecSpec` feeds preflight-at-admission,
+    the coalescing key (requests only coalesce when their specs agree),
+    and the mesh placement — one structure instead of loose strings.
+    """
+
+    op: str                     # one of OPS
+    operand: str                # registry name
+    payload: Any = None         # x vector / (b, n) signal / None
+    params: dict = dataclasses.field(default_factory=dict)
+    spec: ExecSpec | None = None
+
+
+@dataclasses.dataclass
 class KernelRequest:
     rid: int
     op: str                     # one of OPS
     operand: str                # registry name
     payload: Any = None         # x vector / (b, n) signal / None
     params: dict = dataclasses.field(default_factory=dict)
+    spec: ExecSpec | None = None
     result: Any = None
     error: str | None = None
     submit_t: float = 0.0       # perf_counter at submit
@@ -87,6 +127,17 @@ class KernelRequest:
     @property
     def done(self) -> bool:
         return self.result is not None or self.error is not None
+
+    @property
+    def group_key(self) -> tuple:
+        """Coalescing identity: requests collapse into one launch only when
+        op, operand AND execution spec agree (a spec-less request uses the
+        default-spec key, so legacy submits coalesce exactly as before)."""
+        spec = self.spec if self.spec is not None else _DEFAULT_SPEC
+        return (self.op, self.operand, spec.coalesce_key())
+
+
+_DEFAULT_SPEC = ExecSpec()
 
 
 class KernelService(SlotLoop[KernelRequest]):
@@ -111,23 +162,40 @@ class KernelService(SlotLoop[KernelRequest]):
         # bounded window: a long-running server must not grow one float per
         # request served forever; percentiles describe recent traffic
         self._latencies_us: deque[float] = deque(maxlen=8192)
-        self.stats = {
-            "submitted": 0, "served": 0, "failed": 0, "rejected": 0,
-            "steps": 0, "groups": 0, "coalesced": 0, "max_group": 0,
-            "launches": 0, "preflight_rejected": 0, "streamed_launches": 0,
-        }
+        # built from the frozen tuple so the live dict can never drift from
+        # the documented contract
+        self.stats = {key: 0 for key in STATS_KEYS}
 
     # -- async API ---------------------------------------------------------
-    def submit(self, op: str, operand: str, payload: Any = None,
+    def submit(self, op: str | SubmitRequest, operand: str | None = None,
+               payload: Any = None, *, spec: ExecSpec | None = None,
                **params) -> int:
         """Enqueue one kernel request; returns its request id immediately.
+
+        Two spellings are admitted.  The typed form passes a
+        :class:`SubmitRequest` as the sole positional argument — its
+        :class:`~repro.kernels.execspec.ExecSpec` rides along into
+        admission preflight and the coalescing key.  The positional form
+        ``submit(op, operand, payload, **params)`` is unchanged (an
+        optional ``spec=`` keyword attaches a spec there too).
 
         Raises :class:`QueueFull` (and counts the rejection) when
         ``max_queue`` requests are already waiting — backpressure belongs
         to the caller, not to an unbounded buffer.
         """
+        if isinstance(op, SubmitRequest):
+            if operand is not None or payload is not None or params or \
+                    spec is not None:
+                raise TypeError(
+                    "submit(SubmitRequest) takes no other arguments; put "
+                    "operand/payload/params/spec on the request object")
+            treq = op
+            op, operand, payload = treq.op, treq.operand, treq.payload
+            params, spec = dict(treq.params), treq.spec
         if op not in OPS:
             raise ValueError(f"unknown op {op!r}: expected one of {OPS}")
+        if spec is not None and not isinstance(spec, ExecSpec):
+            raise TypeError(f"spec must be an ExecSpec, got {type(spec).__name__}")
         record = self.registry.get(operand)  # fail fast on unknown operands
         self._preflight(op, record)          # ... and on infeasible launches
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
@@ -138,7 +206,7 @@ class KernelService(SlotLoop[KernelRequest]):
         rid = self._next_rid
         self._next_rid += 1
         req = KernelRequest(rid=rid, op=op, operand=operand,
-                            payload=payload, params=dict(params),
+                            payload=payload, params=dict(params), spec=spec,
                             submit_t=time.perf_counter())
         self._by_rid[rid] = req
         super().submit(req)
@@ -208,7 +276,14 @@ class KernelService(SlotLoop[KernelRequest]):
         plans: dict[str, LaunchPlan] = {}
         if record.kind == "matrix" and record.slab_meta is not None:
             tuned = record.tuned
-            if record.mode == "stream":
+            if record.mode == "sharded":
+                plans["spmv"] = plan_spmm_sell_sharded(
+                    record.slab_meta, k=max(1, tuned.k_block),
+                    x_dtype=record.slab_meta.val_dtype,
+                    n_devices=self.registry.n_devices,
+                    w_block=tuned.w_block, k_block=tuned.k_block,
+                    window_cols=record.sharded.window_cols)
+            elif record.mode == "stream":
                 plans["spmv"] = plan_spmm_sell_stream(
                     record.slab_meta, k=max(1, tuned.k_block),
                     x_dtype=record.slab_meta.val_dtype,
@@ -244,7 +319,15 @@ class KernelService(SlotLoop[KernelRequest]):
 
     def plans(self) -> dict[str, dict[str, dict]]:
         """Observability: the current launch-plan summary for every
-        registered operand, keyed name -> op."""
+        registered operand.
+
+        FROZEN contract: the outer key is the registered operand *name*,
+        the inner key is the *op* it can serve (``spmv`` / ``bfs`` /
+        ``pagerank`` / ``fft``), and each leaf is
+        :meth:`repro.analysis.launchplan.LaunchPlan.summary` verbatim
+        (``kernel``, ``ok``, ``n_launches``, ``peak_vmem_bytes``,
+        ``resident_bytes``, ``violations``).  Dashboards key on these
+        names; renames are breaking changes."""
         return {
             name: {op: plan.summary()
                    for op, plan in
@@ -263,11 +346,11 @@ class KernelService(SlotLoop[KernelRequest]):
 
     def execute(self, active: Sequence[tuple[int, KernelRequest]]) -> None:
         self.stats["steps"] += 1
-        groups: dict[tuple[str, str], list[KernelRequest]] = {}
+        groups: dict[tuple, list[KernelRequest]] = {}
         for _, req in active:
             if not req.done:
-                groups.setdefault((req.op, req.operand), []).append(req)
-        for (op, operand), reqs in groups.items():
+                groups.setdefault(req.group_key, []).append(req)
+        for (op, operand, _speckey), reqs in groups.items():
             self.stats["groups"] += 1
             self.stats["max_group"] = max(self.stats["max_group"], len(reqs))
             if len(reqs) > 1:
@@ -340,7 +423,16 @@ class KernelService(SlotLoop[KernelRequest]):
         # the pre-pad (n_cols, k) shape, so without this every distinct
         # group size would trace its own program (see _pow2_pad)
         x_stack = jnp.asarray(np.stack(_pow2_pad(xs), axis=1))
-        if operand.mode == "stream":
+        if operand.mode == "sharded":
+            from repro.kernels import sell_shard
+
+            y = sell_shard.spmm_sell_sharded(
+                operand.sharded, x_stack, mesh=self.registry.mesh,
+                w_block=tuned.w_block, k_block=tuned.k_block,
+                interpret=self.interpret,
+            )
+            self.stats["sharded_launches"] += 1
+        elif operand.mode == "stream":
             y = sell_core.spmm_sell_stream(
                 arrs["cols"], arrs["vals"], arrs["rows"], x_stack,
                 n_rows=operand.n, w_block=tuned.w_block,
@@ -381,11 +473,20 @@ class KernelService(SlotLoop[KernelRequest]):
         # through every gather); larger groups batch sources as columns,
         # padded to a power of two (repeat the last source) so 1..n_slots
         # group sizes share log2 compiled programs instead of one each
-        dist = bfs_k.bfs_sell(
-            arrs["adj"], arrs["nodes"], operand.n,
-            sources[0] if len(good) == 1 else _pow2_pad(sources),
-            interpret=self.interpret,
-        )
+        batch = sources[0] if len(good) == 1 else _pow2_pad(sources)
+        if operand.sharded is not None:
+            from repro.kernels import sell_shard
+
+            dist = sell_shard.bfs_sell_sharded(
+                operand.sharded, batch, mesh=self.registry.mesh,
+                interpret=self.interpret,
+            )
+            self.stats["sharded_launches"] += 1
+        else:
+            dist = bfs_k.bfs_sell(
+                arrs["adj"], arrs["nodes"], operand.n, batch,
+                interpret=self.interpret,
+            )
         self._count_launch(operand)
         dist = np.asarray(dist)
         if len(good) == 1:
@@ -416,10 +517,19 @@ class KernelService(SlotLoop[KernelRequest]):
             configs = _pow2_pad(configs)
             damping = [d for d, _ in configs]
             iters = [i for _, i in configs]
-        rank = pr_k.pagerank_sell(
-            arrs["adj"], arrs["nodes"], arrs["out_degree"], operand.n,
-            damping=damping, iters=iters, interpret=self.interpret,
-        )
+        if operand.sharded is not None:
+            from repro.kernels import sell_shard
+
+            rank = sell_shard.pagerank_sell_sharded(
+                operand.sharded, arrs["out_degree"], mesh=self.registry.mesh,
+                damping=damping, iters=iters, interpret=self.interpret,
+            )
+            self.stats["sharded_launches"] += 1
+        else:
+            rank = pr_k.pagerank_sell(
+                arrs["adj"], arrs["nodes"], arrs["out_degree"], operand.n,
+                damping=damping, iters=iters, interpret=self.interpret,
+            )
         self._count_launch(operand)
         rank = np.asarray(rank)
         if len(good) == 1:

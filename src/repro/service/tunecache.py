@@ -171,11 +171,17 @@ def _file_lock(path: str | None):
     real lock is held, False when the section runs unprotected — callers
     that care about multi-worker safety (:meth:`TuneCache._locked`) surface
     the degrade instead of hiding it.
+
+    The lock file lives *beside the cache path* (``abspath(path) + .lock``),
+    never in the CWD: a relative cache path must not scatter lock files
+    across whatever directory each worker happens to run from — that both
+    litters the repo root and silently breaks the mutual exclusion (two
+    workers with different CWDs would lock different files).
     """
     if fcntl is None or path is None:
         yield False
         return
-    with open(path + ".lock", "a+") as fh:
+    with open(os.path.abspath(path) + ".lock", "a+") as fh:
         fcntl.flock(fh, fcntl.LOCK_EX)
         try:
             yield True
@@ -375,7 +381,7 @@ class TuneCache:
     @staticmethod
     def sell_key(kernel: str, signature: OperandSignature | Any,
                  device: str = "cpu", dtype: str = "float64",
-                 machine=None) -> str:
+                 machine=None, n_devices: int = 1) -> str:
         """Cache key for a SELL layout decision.
 
         ``signature`` may be an :class:`OperandSignature` or a raw operand
@@ -383,12 +389,18 @@ class TuneCache:
         :class:`~repro.core.sdv.MachineParams` the tune scores against —
         part of the key because the chosen layout depends on it (callers
         must pass the *effective* machine, i.e. resolve their default
-        before keying).
+        before keying).  ``n_devices`` joins the key when > 1: a sharded
+        tune scores the busiest shard's row slice, not the whole operand,
+        so single-device and N-device layouts must never share an entry
+        (single-device keys keep their historical spelling unchanged).
         """
         if not isinstance(signature, OperandSignature):
             signature = operand_signature(signature)
         mtag = machine_tag(machine) if machine is not None else "any-machine"
-        return f"{kernel}|{device}|{dtype}|{mtag}|{signature.key}"
+        key = f"{kernel}|{device}|{dtype}|{mtag}|{signature.key}"
+        if int(n_devices) > 1:
+            key += f"|dev{int(n_devices)}"
+        return key
 
     # -- tune entries (the duck-typed protocol core.autotune consults) -----
     def get_sell(self, key: str) -> SellTuneResult | None:

@@ -1,0 +1,162 @@
+"""ExecSpec consolidation tests: one frozen structure behind every op.
+
+The API-redesign contract under test: (1) every legacy kwarg of
+``ops.spmm/spmv/bfs/pagerank/fft`` still works as a deprecated alias that
+resolves to exactly the same ExecSpec — bit-for-bit identical results, one
+DeprecationWarning; (2) mixing ``spec=`` with legacy kwargs is an error, not
+a silent merge; (3) the service's typed :class:`SubmitRequest` carries the
+spec into admission and coalescing.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.graphs import gen as G
+from repro.kernels import ops
+from repro.kernels.execspec import ExecSpec
+from repro.sparse import formats as F
+
+RNG = np.random.default_rng(23)
+
+
+@pytest.fixture(scope="module")
+def world():
+    csr = F.random_csr(80, 80, 5.0, seed=1, skew=1.0)
+    graph = G.random_graph(n_nodes=64, avg_degree=4, seed=2)
+    return csr, graph
+
+
+def test_execspec_is_frozen():
+    spec = ExecSpec(vl=64)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.vl = 128
+
+
+def test_resolve_legacy_kwargs_warn_and_match():
+    with pytest.warns(DeprecationWarning, match="vl"):
+        legacy = ExecSpec.resolve(vl=64, w_block=16)
+    assert legacy == ExecSpec(vl=64, w_block=16)
+    # spec passthrough is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert ExecSpec.resolve(ExecSpec(vl=64)) == ExecSpec(vl=64)
+        assert ExecSpec.resolve() == ExecSpec()
+
+
+def test_resolve_rejects_spec_plus_legacy():
+    with pytest.raises(ValueError, match="either spec="):
+        ExecSpec.resolve(ExecSpec(), vl=64)
+    with pytest.raises(TypeError):
+        ExecSpec.resolve({"vl": 64})
+
+
+def test_coalesce_key_excludes_cache():
+    from repro.service.tunecache import TuneCache
+
+    a = ExecSpec(vl=64)
+    b = ExecSpec(vl=64, cache=TuneCache())
+    assert a.coalesce_key() == b.coalesce_key()
+    assert a.coalesce_key() != ExecSpec(vl=128).coalesce_key()
+
+
+def test_placement_resolution():
+    from repro.compat.meshctx import MeshContext
+
+    assert ExecSpec().n_devices() == 1
+    assert ExecSpec(placement=1).n_devices() == 1
+    ctx = ExecSpec().resolved_placement()
+    assert isinstance(ctx, MeshContext) and ctx.mesh is None
+
+
+@pytest.mark.parametrize("op", ["spmv", "spmm", "bfs", "pagerank", "fft"])
+def test_alias_matches_spec_bit_for_bit(op, world):
+    """The regression the redesign promises: legacy kwargs == spec, exactly."""
+    csr, graph = world
+    x = RNG.standard_normal(80)
+    xb = RNG.standard_normal((80, 4))
+    sig = RNG.standard_normal((2, 32))
+    spec = ExecSpec(vl=16, w_block=8)
+
+    def run_legacy():
+        if op == "spmv":
+            return np.asarray(ops.spmv(csr, x, vl=16, w_block=8))
+        if op == "spmm":
+            return np.asarray(ops.spmm(csr, xb, vl=16, w_block=8))
+        if op == "bfs":
+            return np.asarray(ops.bfs(graph, 1, vl=16))
+        if op == "pagerank":
+            return np.asarray(ops.pagerank(graph, iters=8, vl=16))
+        re, im = ops.fft(sig, b_block=2)
+        return np.stack([np.asarray(re), np.asarray(im)])
+
+    def run_spec():
+        if op == "spmv":
+            return np.asarray(ops.spmv(csr, x, spec=spec))
+        if op == "spmm":
+            return np.asarray(ops.spmm(csr, xb, spec=spec))
+        if op == "bfs":
+            return np.asarray(ops.bfs(graph, 1, spec=ExecSpec(vl=16)))
+        if op == "pagerank":
+            return np.asarray(ops.pagerank(graph, iters=8,
+                                           spec=ExecSpec(vl=16)))
+        re, im = ops.fft(sig, spec=ExecSpec(b_block=2))
+        return np.stack([np.asarray(re), np.asarray(im)])
+
+    with pytest.warns(DeprecationWarning):
+        via_legacy = run_legacy()
+    via_spec = run_spec()
+    # bit-for-bit: the alias resolves to the same spec, same kernel, same
+    # launch geometry — not merely numerically close
+    assert np.array_equal(via_legacy, via_spec)
+
+
+def test_ops_reject_spec_plus_legacy(world):
+    csr, _ = world
+    x = RNG.standard_normal(80)
+    with pytest.raises(ValueError, match="either spec="):
+        ops.spmv(csr, x, spec=ExecSpec(vl=16), vl=16)
+
+
+def test_submit_request_carries_spec(world):
+    from repro.service import (
+        KernelRegistry,
+        KernelService,
+        SubmitRequest,
+        TuneCache,
+    )
+
+    csr, _ = world
+    reg = KernelRegistry(cache=TuneCache())
+    reg.register_matrix("mat", csr)
+    svc = KernelService(reg)
+    x = RNG.standard_normal(80)
+    ref = np.asarray(ops.spmv(csr, x, spec=ExecSpec(vl=16)))
+
+    rid = svc.submit(SubmitRequest(op="spmv", operand="mat", payload=x,
+                                   spec=ExecSpec(w_block=8)))
+    # typed submit refuses extra positional/keyword baggage
+    with pytest.raises(TypeError, match="takes no other arguments"):
+        svc.submit(SubmitRequest(op="spmv", operand="mat", payload=x), "mat")
+    with pytest.raises(TypeError, match="ExecSpec"):
+        svc.submit("spmv", "mat", x, spec={"w_block": 8})
+    svc.drain()
+    np.testing.assert_allclose(np.asarray(svc.poll(rid)), ref, atol=1e-10)
+    assert svc._by_rid[rid].spec == ExecSpec(w_block=8)
+
+    # distinct specs never share a coalesced launch; equal specs do
+    before = svc.stats["groups"]
+    svc.submit("spmv", "mat", x, spec=ExecSpec(w_block=8))
+    svc.submit("spmv", "mat", x, spec=ExecSpec(w_block=8))
+    svc.submit("spmv", "mat", x, spec=ExecSpec(w_block=16))
+    svc.drain()
+    assert svc.stats["groups"] - before == 2
+
+
+def test_stats_keys_are_frozen():
+    from repro.service import STATS_KEYS, KernelRegistry, KernelService
+    from repro.service.tunecache import TuneCache
+
+    svc = KernelService(KernelRegistry(cache=TuneCache()))
+    assert tuple(svc.stats) == STATS_KEYS
