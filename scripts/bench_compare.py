@@ -42,8 +42,12 @@ TIME_METRICS = ("us_per_call", "p50_us", "p95_us", "p99_us",
 #: (BENCH_sharded.json): 1 means the multi-device result drifted beyond
 #: 1e-10 from single-device execution — a numerical regression fails the
 #: gate even when every timing is within tolerance.
+#: ``trace_orphans`` / ``trace_incomplete`` are the zero-base counters on
+#: the obs rows (BENCH_obs.json): any span left open after the drain, or
+#: any submit attempt that never retired a closed root span, breaks the
+#: trace-completeness invariant and fails the gate from a 0 base.
 METRICS = TIME_METRICS + ("pad_factor", "rejected", "resident_plan_accepted",
-                          "mismatch")
+                          "mismatch", "trace_orphans", "trace_incomplete")
 
 
 def load(path: str) -> dict:

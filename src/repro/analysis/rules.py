@@ -15,7 +15,10 @@ regex scan inside one test):
   host-side randomness, IO, printing or clock reads;
 * ``vmem-budget-literal`` — the VMEM budget has one source of truth
   (:data:`repro.core.autotune.VMEM_BUDGET_BYTES`); spelling its value as a
-  literal anywhere else is a fork waiting to drift.
+  literal anywhere else is a fork waiting to drift;
+* ``timer-discipline`` — serving-path code measures wall time through
+  :mod:`repro.obs.timer` only; raw ``time.perf_counter()`` / ``time.time()``
+  readings fork the clock the spans and histograms share.
 """
 from __future__ import annotations
 
@@ -339,12 +342,83 @@ class VmemBudgetLiteral(Rule):
         return out
 
 
+class TimerDiscipline(Rule):
+    """Serving-path wall time flows through :mod:`repro.obs.timer` only.
+
+    Span timestamps, latency histograms and launch profiles are compared
+    against each other, so they must read one clock: a raw
+    ``time.perf_counter()`` / ``time.time()`` call in serving code is a
+    second timing source waiting to disagree (epoch vs monotonic, seconds
+    vs microseconds).  Scoped by participation: the rule activates in
+    modules under a ``service``/``serve`` path component and in any module
+    that imports ``repro.service*`` / ``repro.serve*`` at TOP level —
+    nested (lazy) imports do not opt a module in, and the obs module
+    itself (the one sanctioned wrapper) is exempt.  ``# lint-ok:
+    timer-discipline`` escapes a deliberate raw reading.
+    """
+
+    name = "timer-discipline"
+    description = ("raw time.perf_counter()/time.time() in serving-path "
+                   "code; use repro.obs.timer")
+
+    FORBIDDEN_DOTTED = frozenset({"time.perf_counter", "time.time",
+                                  "time.monotonic"})
+    FORBIDDEN_FROM = frozenset({"perf_counter", "monotonic"})
+    _SERVING_PREFIXES = ("repro.service", "repro.serve")
+
+    def applies(self, path: str) -> bool:
+        # the sanctioned wrapper: repro/obs/** is where the raw calls live
+        return os.sep + "obs" + os.sep not in os.path.abspath(path)
+
+    @classmethod
+    def _participates(cls, tree: ast.AST, path: str) -> bool:
+        parts = os.path.abspath(path).split(os.sep)
+        if "service" in parts or "serve" in parts:
+            return True
+        # only module-top-level imports opt a file in: a lazy nested import
+        # of the service layer (the ops/bench idiom for breaking layering)
+        # does not make the whole module serving-path code
+        body = getattr(tree, "body", ())
+        for node in body:
+            if isinstance(node, ast.Import):
+                if any(a.name.startswith(cls._SERVING_PREFIXES)
+                       for a in node.names):
+                    return True
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                if node.module.startswith(cls._SERVING_PREFIXES):
+                    return True
+        return False
+
+    def check(self, tree: ast.AST, path: str) -> list[Finding]:
+        if not self._participates(tree, path):
+            return []
+        out: list[Finding] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                dotted = _dotted(node.func)
+                if dotted in self.FORBIDDEN_DOTTED:
+                    out.append(self.finding(
+                        path, node,
+                        f"raw {dotted}() in serving-path code; use "
+                        "repro.obs.timer (now_s/now_us/Stopwatch)"))
+            elif isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if alias.name in self.FORBIDDEN_FROM \
+                            or alias.name == "time":
+                        out.append(self.finding(
+                            path, node,
+                            f"from time import {alias.name} in serving-path "
+                            "code; use repro.obs.timer"))
+        return out
+
+
 ALL_RULES: tuple[Rule, ...] = (
     CompatDiscipline(),
     TuneCacheLockDiscipline(),
     AsyncHygiene(),
     KernelPurity(),
     VmemBudgetLiteral(),
+    TimerDiscipline(),
 )
 
 

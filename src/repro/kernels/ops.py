@@ -36,6 +36,8 @@ from repro.kernels import sell_core, sell_shard
 from repro.kernels import spmv as spmv_k
 from repro.kernels.execspec import _UNSET, ExecSpec
 from repro.kernels.ref import fft_twiddles
+from repro.obs import Stopwatch
+from repro.obs import profile as obs_profile
 from repro.sparse.formats import (
     CSRMatrix,
     EllpackMatrix,
@@ -163,6 +165,27 @@ def _sharded_graph_meta(sg) -> SlabMeta:
 _SPMM_MODES = ("auto", "resident", "stream")
 
 
+def _run_profiled(op: str, plan, thunk):
+    """Run a core-call thunk under the optional launch profiler.
+
+    When a :class:`repro.obs.LaunchProfiler` is installed
+    (:func:`repro.obs.profile.install` / :func:`~repro.obs.profiled`), the
+    call is forced to completion (``block_until_ready`` — measured wall
+    time must cover the device work, not the async dispatch) and the
+    (static preflight plan, measured wall) pair is recorded.  With no
+    profiler installed the cost is one global read and the result stays
+    lazy, exactly as before.
+    """
+    prof = obs_profile.active()
+    if prof is None:
+        return thunk()
+    sw = Stopwatch().start()
+    y = jax.block_until_ready(thunk())
+    sw.stop()
+    prof.record(op=op, operand=plan.operand, wall_us=sw.elapsed_us, plan=plan)
+    return y
+
+
 def _spmm_slabs(
     slabs: SellSlabs,
     x,
@@ -205,22 +228,22 @@ def _spmm_slabs(
     )
     if mode == "resident":
         resident_plan.raise_if_invalid()
-        return sell_core.spmm_sell(
+        return _run_profiled("spmm", resident_plan, lambda: sell_core.spmm_sell(
             *args, n_rows=slabs.n_rows, w_block=w_block, k_block=k_block,
             interpret=interpret,
-        )
+        ))
     if col_tile is None or row_tile is None:
         ct, rt = pick_stream_tiles(meta.c, w_block, k_block)
         col_tile = ct if col_tile is None else col_tile
         row_tile = rt if row_tile is None else row_tile
-    plan_spmm_sell_stream(
+    stream_plan = plan_spmm_sell_stream(
         meta, k=k, x_dtype=str(x.dtype), w_block=w_block, k_block=k_block,
         col_tile=col_tile, row_tile=row_tile,
     ).raise_if_invalid()
-    return sell_core.spmm_sell_stream(
+    return _run_profiled("spmm", stream_plan, lambda: sell_core.spmm_sell_stream(
         *args, n_rows=slabs.n_rows, w_block=w_block, k_block=k_block,
         col_tile=int(col_tile), row_tile=int(row_tile), interpret=interpret,
-    )
+    ))
 
 
 def _spmm_sharded(

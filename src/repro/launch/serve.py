@@ -5,7 +5,6 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
@@ -14,6 +13,7 @@ import jax
 from repro import configs
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
+from repro.obs import Stopwatch
 from repro.serve import Batcher, GenerationConfig, Request
 
 
@@ -52,9 +52,9 @@ def main() -> None:
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32)
         batcher.submit(Request(rid=rid, prompt=prompt, max_new_tokens=args.new_tokens))
-    t0 = time.perf_counter()
-    done = batcher.run()
-    dt = time.perf_counter() - t0
+    with Stopwatch() as sw:
+        done = batcher.run()
+    dt = sw.elapsed_s
     total_tokens = sum(len(r.generated) for r in done)
     print(f"[serve] {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s incl. compile)")

@@ -58,6 +58,12 @@ class SlotLoop(Generic[R]):
     def retire(self, request: R) -> None:
         pass
 
+    def observe_step(self, queued: int, in_flight: int) -> None:
+        """Optional per-round observation point, called once per ``step``
+        after admission with the post-admission queue depth and the number
+        of occupied slots.  Default no-op; the kernel service publishes
+        these as gauges (:mod:`repro.obs`)."""
+
     # -- the loop ----------------------------------------------------------
     def submit(self, request: R) -> None:
         self.queue.append(request)
@@ -89,6 +95,7 @@ class SlotLoop(Generic[R]):
         self._evict_done()
         self._fill_slots()
         act = self.active()
+        self.observe_step(len(self.queue), len(act))
         if not act:
             return False
         self.execute(act)

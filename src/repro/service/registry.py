@@ -11,7 +11,6 @@ performs **zero** pad-factor measurements.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any
 
 import numpy as np
@@ -27,6 +26,7 @@ from repro.analysis.preflight import (
 )
 from repro.core.autotune import SellTuneResult
 from repro.core.sdv import MachineParams, tpu_v5e_machine
+from repro.obs import MetricsRegistry, Stopwatch
 from repro.graphs.gen import EllpackGraph, graph_to_sell_slabs
 from repro.service.tunecache import OperandSignature, TuneCache, operand_signature
 from repro.sparse.formats import CSRMatrix, SellSlabs, to_csr
@@ -76,7 +76,8 @@ class KernelRegistry:
     def __init__(self, cache: TuneCache | None = None,
                  machine: MachineParams | None = None,
                  device: str | None = None,
-                 mesh=None):
+                 mesh=None,
+                 metrics: MetricsRegistry | None = None):
         if device is None:
             import jax
 
@@ -99,6 +100,11 @@ class KernelRegistry:
         self.mesh = _placement.resolved_placement()
         self.n_devices = _placement.n_devices()
         self._operands: dict[str, RegisteredOperand] = {}
+        # registration-path observability: register_us was recorded on each
+        # operand since PR 4 but never surfaced — every admission now also
+        # lands in this registry (share the service's instance to get one
+        # unified snapshot)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
     # -- lookup ------------------------------------------------------------
     def names(self) -> list[str]:
@@ -115,10 +121,44 @@ class KernelRegistry:
     def __contains__(self, name: str) -> bool:
         return name in self._operands
 
-    def _admit(self, op: RegisteredOperand, t0: float) -> RegisteredOperand:
-        op.register_us = (time.perf_counter() - t0) * 1e6
+    def _admit(self, op: RegisteredOperand, sw: Stopwatch) -> RegisteredOperand:
+        op.register_us = sw.stop().elapsed_us
         self._operands[op.name] = op
+        self.metrics.histogram(
+            "register_us", "wall time of operand registration "
+            "(pack + tune + upload)").observe(op.register_us)
+        self.metrics.counter(f"registered_{op.kind}").inc()
+        if op.tune_was_cached:
+            self.metrics.counter(
+                "register_tune_cached",
+                "registrations whose tune came from the TuneCache").inc()
         return op
+
+    def summary(self) -> dict:
+        """Registration-path observability snapshot.
+
+        Per-operand: kind, execution mode, registration wall time
+        (``register_us`` — recorded since the registry existed, surfaced
+        here), whether the tune was a cache hit, batched launches served,
+        and the pack's pad factor.  ``cache`` carries the TuneCache's own
+        stats including per-key repack counts (``note_repack`` events that
+        previously died inside the cache file).
+        """
+        return {
+            "operands": {
+                name: {
+                    "kind": op.kind,
+                    "mode": op.mode,
+                    "register_us": round(op.register_us, 1),
+                    "tune_was_cached": op.tune_was_cached,
+                    "launches": op.launches,
+                    "pad_factor": round(op.pad_factor, 4),
+                }
+                for name, op in sorted(self._operands.items())
+            },
+            "cache": dict(self.cache.stats),
+            "repacks": dict(self.cache.repacks),
+        }
 
     # -- registration ------------------------------------------------------
     def register_matrix(self, name: str, matrix) -> RegisteredOperand:
@@ -131,7 +171,7 @@ class KernelRegistry:
         """
         from repro.kernels.ops import pack_tuned
 
-        t0 = time.perf_counter()
+        sw = Stopwatch().start()
         csr = to_csr(matrix) if not isinstance(matrix, CSRMatrix) else matrix
         sig = operand_signature(csr)
         before = self.cache.hits
@@ -168,7 +208,7 @@ class KernelRegistry:
                 window_cols=op.sharded.window_cols,
             ).raise_if_invalid()}
             op.device_arrays = _matrix_device_arrays(slabs)
-            return self._admit(op, t0)
+            return self._admit(op, sw)
         resident = plan_spmm_sell(
             op.slab_meta, k=max(1, tuned.k_block),
             x_dtype=str(csr.data.dtype),
@@ -190,7 +230,7 @@ class KernelRegistry:
                 col_tile=tuned.col_tile, row_tile=tuned.row_tile,
             ).raise_if_invalid()}
         op.device_arrays = _matrix_device_arrays(slabs)
-        return self._admit(op, t0)
+        return self._admit(op, sw)
 
     def register_graph(self, name: str, graph: EllpackGraph) -> RegisteredOperand:
         """Pack + tune a graph for BFS/PageRank serving.
@@ -204,7 +244,7 @@ class KernelRegistry:
         dtype = "float64"
         from repro.kernels.ops import tune_and_pack
 
-        t0 = time.perf_counter()
+        sw = Stopwatch().start()
         sig = operand_signature(graph)
         key = self.cache.sell_key("graph", sig, device=self.device,
                                   dtype=dtype, machine=self.machine)
@@ -244,7 +284,7 @@ class KernelRegistry:
             "pagerank": plan_pagerank_sell(op.slab_meta).raise_if_invalid(),
         }
         op.device_arrays = _graph_device_arrays(slabs, graph)
-        return self._admit(op, t0)
+        return self._admit(op, sw)
 
     def register_fft(self, name: str, n: int) -> RegisteredOperand:
         """Precompute the twiddle plan for length-``n`` batched FFTs."""
@@ -252,7 +292,7 @@ class KernelRegistry:
 
         from repro.kernels.ref import fft_twiddles
 
-        t0 = time.perf_counter()
+        sw = Stopwatch().start()
         if n & (n - 1) or n < 2:
             raise ValueError(f"fft length must be a power of two >= 2, got {n}")
         wre, wim = fft_twiddles(n, np.float64)
@@ -260,7 +300,7 @@ class KernelRegistry:
         op.plans = {
             "fft": plan_fft_stockham(n, batch=8).raise_if_invalid()}
         op.device_arrays = {"wre": jnp.asarray(wre), "wim": jnp.asarray(wim)}
-        return self._admit(op, t0)
+        return self._admit(op, sw)
 
 
 def _matrix_device_arrays(slabs: SellSlabs) -> dict:

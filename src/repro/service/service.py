@@ -26,17 +26,33 @@ with :class:`QueueFull` (counted in ``stats["rejected"]``) instead of
 buffering unboundedly — the backpressure signal a fronting load balancer
 needs.  Per-request submit/finish timestamps feed
 :meth:`latency_percentiles`.
+
+Observability (:mod:`repro.obs`) threads through every stage: ``stats``
+is a live view over the service's :class:`~repro.obs.MetricsRegistry`
+counters, per-op latency / group-size / launch-wall histograms and
+queue-depth / in-flight gauges accumulate alongside, and an optional
+:class:`~repro.obs.Tracer` records one span tree per request — including
+rejected and failed ones — with batched launch spans fanning in their
+group members via links.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Any, Sequence
 
 import numpy as np
 
 from repro.analysis.launchplan import LaunchPlan, LaunchPlanError
+from repro.obs import (
+    CounterDict,
+    LaunchProfiler,
+    MetricsRegistry,
+    Span,
+    Stopwatch,
+    Tracer,
+    timer,
+)
 from repro.analysis.preflight import (
     plan_bfs_sell,
     plan_fft_stockham,
@@ -56,6 +72,10 @@ OPS = ("spmv", "bfs", "pagerank", "fft")
 #: names are observability API — dashboards and the bench gate
 #: (``scripts/bench_compare.py`` zero-base counters) key on them, so
 #: renaming or removing one is a breaking change; additions append here.
+#: The SOURCE OF TRUTH is the service's metrics registry: each key is a
+#: live :class:`repro.obs.Counter` under the same name, and ``stats`` is
+#: the :class:`repro.obs.CounterDict` view over them — the dict spelling
+#: and ``registry.snapshot()`` agree by construction.
 STATS_KEYS = (
     "submitted",            # requests admitted (post-preflight)
     "served",               # requests retired with a result
@@ -121,8 +141,13 @@ class KernelRequest:
     spec: ExecSpec | None = None
     result: Any = None
     error: str | None = None
-    submit_t: float = 0.0       # perf_counter at submit
-    done_t: float = 0.0         # perf_counter when the result/error landed
+    submit_t: float = 0.0       # obs timer.now_s() at submit
+    done_t: float = 0.0         # obs timer.now_s() when the result landed
+    # trace spans (None when the service runs without a tracer): the
+    # request root, its queued-stage child, its execute-stage child
+    span: Span | None = None
+    queued_span: Span | None = None
+    exec_span: Span | None = None
 
     @property
     def done(self) -> bool:
@@ -145,7 +170,9 @@ class KernelService(SlotLoop[KernelRequest]):
 
     def __init__(self, registry: KernelRegistry, n_slots: int = 8,
                  interpret: bool | None = None,
-                 max_queue: int | None = None):
+                 max_queue: int | None = None,
+                 metrics: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None):
         super().__init__(n_slots)
         from repro.kernels.ops import default_interpret
 
@@ -162,9 +189,21 @@ class KernelService(SlotLoop[KernelRequest]):
         # bounded window: a long-running server must not grow one float per
         # request served forever; percentiles describe recent traffic
         self._latencies_us: deque[float] = deque(maxlen=8192)
-        # built from the frozen tuple so the live dict can never drift from
-        # the documented contract
-        self.stats = {key: 0 for key in STATS_KEYS}
+        # observability: the metrics registry is the source of truth for
+        # every counter; ``stats`` is the frozen-contract dict view over it
+        # (built from the frozen tuple so the live dict can never drift
+        # from the documented key set).  ``tracer=None`` disables span
+        # recording entirely — the hot path pays one None check.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = CounterDict(self.metrics, STATS_KEYS)
+        self.tracer = tracer
+        self.profiler = LaunchProfiler()
+        self._g_queue = self.metrics.gauge(
+            "queue_depth", "admission queue length after slot fill")
+        self._g_inflight = self.metrics.gauge(
+            "in_flight", "occupied slots this scheduling round")
+        self._g_vmem = self.metrics.gauge(
+            "planned_vmem_bytes", "peak VMEM of the last preflighted plan")
 
     # -- async API ---------------------------------------------------------
     def submit(self, op: str | SubmitRequest, operand: str | None = None,
@@ -192,26 +231,63 @@ class KernelService(SlotLoop[KernelRequest]):
             treq = op
             op, operand, payload = treq.op, treq.operand, treq.payload
             params, spec = dict(treq.params), treq.spec
-        if op not in OPS:
-            raise ValueError(f"unknown op {op!r}: expected one of {OPS}")
-        if spec is not None and not isinstance(spec, ExecSpec):
-            raise TypeError(f"spec must be an ExecSpec, got {type(spec).__name__}")
-        record = self.registry.get(operand)  # fail fast on unknown operands
-        self._preflight(op, record)          # ... and on infeasible launches
-        if self.max_queue is not None and len(self.queue) >= self.max_queue:
-            self.stats["rejected"] += 1
-            raise QueueFull(
-                f"admission queue is full ({self.max_queue} waiting); "
-                "step() the service or shed load")
+        # trace completeness invariant: EVERY submit attempt — including
+        # validation failures, preflight rejections and QueueFull — retires
+        # exactly one closed root span, so the root starts before any check
+        # can raise and every exit path below closes it.
+        root = self._t_start("request", op=str(op), operand=str(operand))
+        try:
+            if op not in OPS:
+                raise ValueError(f"unknown op {op!r}: expected one of {OPS}")
+            if spec is not None and not isinstance(spec, ExecSpec):
+                raise TypeError(
+                    f"spec must be an ExecSpec, got {type(spec).__name__}")
+            record = self.registry.get(operand)  # fail fast: unknown operand
+            pre = self._t_start("preflight", parent=root)
+            try:
+                self._preflight(op, record)      # ... infeasible launches
+            except LaunchPlanError:
+                self._t_end(pre, status="rejected")
+                raise
+            self._t_end(pre)
+            if self.max_queue is not None and \
+                    len(self.queue) >= self.max_queue:
+                self.stats["rejected"] += 1
+                raise QueueFull(
+                    f"admission queue is full ({self.max_queue} waiting); "
+                    "step() the service or shed load")
+        except QueueFull:
+            self._t_end(root, status="rejected", reason="queue_full")
+            raise
+        except LaunchPlanError:
+            self._t_end(root, status="rejected", reason="preflight")
+            raise
+        except BaseException:
+            self._t_end(root, status="error")
+            raise
         rid = self._next_rid
         self._next_rid += 1
         req = KernelRequest(rid=rid, op=op, operand=operand,
                             payload=payload, params=dict(params), spec=spec,
-                            submit_t=time.perf_counter())
+                            submit_t=timer.now_s(), span=root)
+        if root is not None:
+            root.attrs["rid"] = rid
+            req.queued_span = self._t_start("queued", parent=root)
         self._by_rid[rid] = req
         super().submit(req)
         self.stats["submitted"] += 1
         return rid
+
+    # -- tracing helpers (no-ops when the service has no tracer) -----------
+    def _t_start(self, name: str, parent: Span | None = None,
+                 links=(), **attrs) -> Span | None:
+        if self.tracer is None:
+            return None
+        return self.tracer.start(name, parent=parent, links=links, **attrs)
+
+    def _t_end(self, span: Span | None, status: str = "ok", **attrs) -> None:
+        if self.tracer is not None:
+            self.tracer.end(span, status=status, **attrs)
 
     def poll(self, rid: int) -> Any | None:
         """Result of request ``rid`` if it finished, else None.  Raises on a
@@ -311,6 +387,7 @@ class KernelService(SlotLoop[KernelRequest]):
         plan = self._operand_plans(record).get(op)
         if plan is None:                # op/kind mismatch: fails at execute
             return
+        self._g_vmem.set(plan.peak_vmem_bytes)
         try:
             plan.raise_if_invalid()
         except LaunchPlanError:
@@ -327,7 +404,12 @@ class KernelService(SlotLoop[KernelRequest]):
         :meth:`repro.analysis.launchplan.LaunchPlan.summary` verbatim
         (``kernel``, ``ok``, ``n_launches``, ``peak_vmem_bytes``,
         ``resident_bytes``, ``violations``).  Dashboards key on these
-        names; renames are breaking changes."""
+        names; renames are breaking changes.
+
+        The schema reference lives with the producing types —
+        ``LaunchPlan.summary`` for plan leaves, the service's
+        :class:`~repro.obs.MetricsRegistry` (``self.metrics``) for every
+        counter/gauge/histogram name — not in downstream docs."""
         return {
             name: {op: plan.summary()
                    for op, plan in
@@ -339,10 +421,33 @@ class KernelService(SlotLoop[KernelRequest]):
     def done(self, req: KernelRequest) -> bool:
         return req.done
 
+    def admit(self, slot: int, req: KernelRequest) -> None:
+        # queue residency ends, slot residency begins
+        self._t_end(req.queued_span)
+        if req.span is not None:
+            req.exec_span = self._t_start("execute", parent=req.span,
+                                          slot=slot)
+
+    def observe_step(self, queued: int, in_flight: int) -> None:
+        self._g_queue.set(queued)
+        self._g_inflight.set(in_flight)
+
     def retire(self, req: KernelRequest) -> None:
-        self.stats["served" if req.error is None else "failed"] += 1
+        ok = req.error is None
+        self.stats["served" if ok else "failed"] += 1
         if req.done_t:
-            self._latencies_us.append((req.done_t - req.submit_t) * 1e6)
+            lat_us = (req.done_t - req.submit_t) * 1e6
+            self._latencies_us.append(lat_us)
+            self.metrics.histogram(
+                f"latency_us_{req.op}",
+                f"submit->result latency of {req.op} requests").observe(lat_us)
+        status = "ok" if ok else "error"
+        self._t_end(req.queued_span)   # idempotent: usually closed at admit
+        self._t_end(req.exec_span, status=status)
+        if ok:
+            self._t_end(req.span)
+        else:
+            self._t_end(req.span, status="error", error=req.error)
 
     def execute(self, active: Sequence[tuple[int, KernelRequest]]) -> None:
         self.stats["steps"] += 1
@@ -355,13 +460,24 @@ class KernelService(SlotLoop[KernelRequest]):
             self.stats["max_group"] = max(self.stats["max_group"], len(reqs))
             if len(reqs) > 1:
                 self.stats["coalesced"] += len(reqs)
+            self.metrics.histogram(
+                "group_size", "requests per coalesced launch group"
+            ).observe(len(reqs))
+            # the fan-in point: ONE launch span, linked to the root span of
+            # every request it serves (N request trees -> one batched call)
+            launch = self._t_start(
+                "launch", op=op, operand=operand, group_size=len(reqs),
+                links=[r.span for r in reqs if r.span is not None])
             try:
                 self._run_group(op, self.registry.get(operand), reqs)
             except Exception as exc:  # noqa: BLE001 - errors belong to requests
                 for req in reqs:
                     if not req.done:
                         req.error = f"{type(exc).__name__}: {exc}"
-        now = time.perf_counter()
+                self._t_end(launch, status="error")
+            else:
+                self._t_end(launch)
+        now = timer.now_s()
         for _, req in active:
             if req.done and not req.done_t:
                 req.done_t = now
@@ -372,11 +488,24 @@ class KernelService(SlotLoop[KernelRequest]):
         runner = getattr(self, f"_run_{op}")
         runner(operand, reqs)
 
-    def _count_launch(self, operand: RegisteredOperand) -> None:
+    def _count_launch(self, operand: RegisteredOperand, *,
+                      op: str | None = None,
+                      wall_us: float | None = None) -> None:
         """The launch-counter hook: one batched core call per coalesced
-        group, visible in ``stats['launches']`` and per operand."""
+        group, visible in ``stats['launches']`` and per operand.  When the
+        caller measured the call (``op`` + ``wall_us``), the launch also
+        lands in the wall-time histogram and the launch profiler — paired
+        with the operand's static preflight plan so planned-vs-measured
+        residuals are queryable (:meth:`repro.obs.LaunchProfiler.residuals`)."""
         self.stats["launches"] += 1
         operand.launches += 1
+        if op is not None and wall_us is not None:
+            self.metrics.histogram(
+                f"launch_wall_us_{op}",
+                f"measured wall time of batched {op} launches").observe(wall_us)
+            self.profiler.record(
+                op=op, operand=operand.name, wall_us=wall_us,
+                plan=operand.plans.get(op))
 
     @staticmethod
     def _validated(reqs: list[KernelRequest], check) -> tuple[list, list]:
@@ -423,6 +552,7 @@ class KernelService(SlotLoop[KernelRequest]):
         # the pre-pad (n_cols, k) shape, so without this every distinct
         # group size would trace its own program (see _pow2_pad)
         x_stack = jnp.asarray(np.stack(_pow2_pad(xs), axis=1))
+        sw = Stopwatch().start()
         if operand.mode == "sharded":
             from repro.kernels import sell_shard
 
@@ -446,8 +576,9 @@ class KernelService(SlotLoop[KernelRequest]):
                 n_rows=operand.n, w_block=tuned.w_block,
                 k_block=tuned.k_block, interpret=self.interpret,
             )
-        self._count_launch(operand)
-        y = np.asarray(y)
+        y = np.asarray(y)          # forces the async dispatch: real wall time
+        sw.stop()
+        self._count_launch(operand, op="spmv", wall_us=sw.elapsed_us)
         for i, req in enumerate(good):
             req.result = y[:, i]
 
@@ -474,6 +605,7 @@ class KernelService(SlotLoop[KernelRequest]):
         # padded to a power of two (repeat the last source) so 1..n_slots
         # group sizes share log2 compiled programs instead of one each
         batch = sources[0] if len(good) == 1 else _pow2_pad(sources)
+        sw = Stopwatch().start()
         if operand.sharded is not None:
             from repro.kernels import sell_shard
 
@@ -487,8 +619,9 @@ class KernelService(SlotLoop[KernelRequest]):
                 arrs["adj"], arrs["nodes"], operand.n, batch,
                 interpret=self.interpret,
             )
-        self._count_launch(operand)
         dist = np.asarray(dist)
+        sw.stop()
+        self._count_launch(operand, op="bfs", wall_us=sw.elapsed_us)
         if len(good) == 1:
             good[0].result = dist
         else:
@@ -517,6 +650,7 @@ class KernelService(SlotLoop[KernelRequest]):
             configs = _pow2_pad(configs)
             damping = [d for d, _ in configs]
             iters = [i for _, i in configs]
+        sw = Stopwatch().start()
         if operand.sharded is not None:
             from repro.kernels import sell_shard
 
@@ -530,8 +664,9 @@ class KernelService(SlotLoop[KernelRequest]):
                 arrs["adj"], arrs["nodes"], arrs["out_degree"], operand.n,
                 damping=damping, iters=iters, interpret=self.interpret,
             )
-        self._count_launch(operand)
         rank = np.asarray(rank)
+        sw.stop()
+        self._count_launch(operand, op="pagerank", wall_us=sw.elapsed_us)
         if len(good) == 1:
             good[0].result = rank
         else:
@@ -573,12 +708,14 @@ class KernelService(SlotLoop[KernelRequest]):
             spans.append((len(rows), len(rows) + sig.shape[0]))
             rows.extend(sig)
         batch = jnp.asarray(np.stack(rows))
+        sw = Stopwatch().start()
         re, im = fft_k.fft_stockham(
             batch, jnp.zeros_like(batch),
             operand.device_arrays["wre"], operand.device_arrays["wim"],
             b_block=min(8, batch.shape[0]), interpret=self.interpret,
         )
-        self._count_launch(operand)
         re, im = np.asarray(re), np.asarray(im)
+        sw.stop()
+        self._count_launch(operand, op="fft", wall_us=sw.elapsed_us)
         for req, (lo, hi) in zip(good, spans):
             req.result = (re[lo:hi], im[lo:hi])

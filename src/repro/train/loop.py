@@ -12,7 +12,6 @@ Fault-tolerance contract (tested in tests/test_fault_tolerance.py):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import jax
@@ -21,6 +20,7 @@ from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
 from repro.compat import concrete_mesh, use_mesh
 from repro.data import DataConfig, SyntheticLM
 from repro.models.config import ModelConfig
+from repro.obs import Stopwatch
 from repro.runtime.heartbeat import StepMonitor
 from repro.train.step import TrainConfig, TrainState, init_train_state, make_train_step
 
@@ -102,10 +102,13 @@ def train_loop(
             batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
             if b_shard is not None:
                 batch = jax.device_put(batch, b_shard)
-            t0 = time.perf_counter()
-            state, metrics = step_fn(state, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
-            dt = time.perf_counter() - t0
+            with Stopwatch() as sw:
+                state, metrics = step_fn(state, batch)
+                # float() blocks on the device values, so the conversion
+                # stays inside the timed region: wall_s covers real step
+                # completion, not just async dispatch
+                metrics = {k: float(v) for k, v in metrics.items()}
+            dt = sw.elapsed_s
             monitor.record(step, dt)
             metrics["step"] = step
             metrics["wall_s"] = dt

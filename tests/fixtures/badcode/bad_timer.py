@@ -1,0 +1,9 @@
+"""Fixture: raw clock read in serving-path code (timer-discipline)."""
+import time
+
+from repro.serve.slots import SlotLoop
+
+
+def stamp_step(loop: SlotLoop) -> float:
+    loop.step()
+    return time.perf_counter()      # the one violation: raw serving clock

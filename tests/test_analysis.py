@@ -46,6 +46,7 @@ EXPECTED = {
     "bad_async.py": "async-hygiene",
     "bad_kernel.py": "kernel-purity",
     "bad_vmem.py": "vmem-budget-literal",
+    "bad_timer.py": "timer-discipline",
 }
 
 
@@ -126,6 +127,46 @@ def test_strict_flags_unused_suppression(tmp_path):
     assert lint_paths([str(clean)]) == []          # default: silent
     strict = lint_paths([str(clean)], strict=True)
     assert sorted(f.rule for f in strict) == ["unused-suppression"] * 2
+
+
+def test_timer_rule_inactive_without_participation(tmp_path):
+    """A module that neither lives under service/serve nor imports the
+    serving layer at top level may read the raw clock freely."""
+    f = tmp_path / "standalone.py"
+    f.write_text("import time\nT0 = time.perf_counter()\n")
+    assert lint_paths([str(f)]) == []
+
+
+def test_timer_rule_nested_import_does_not_participate(tmp_path):
+    """A lazy (function-local) import of the serving layer — the ops/bench
+    layering idiom — must not opt the whole module into the timer rule."""
+    f = tmp_path / "lazy.py"
+    f.write_text(
+        "import time\n"
+        "def helper():\n"
+        "    from repro.service.tunecache import TuneCache\n"
+        "    return TuneCache, time.perf_counter()\n")
+    assert lint_paths([str(f)]) == []
+
+
+def test_timer_rule_top_level_import_participates(tmp_path):
+    f = tmp_path / "servingish.py"
+    f.write_text(
+        "import time\n"
+        "from repro.serve.slots import SlotLoop\n"
+        "T0 = time.perf_counter()\n"
+        "T1 = time.time()\n")
+    findings = lint_paths([str(f)])
+    assert [x.rule for x in findings] == ["timer-discipline"] * 2
+
+
+def test_timer_rule_lint_ok_escape(tmp_path):
+    f = tmp_path / "escaped.py"
+    f.write_text(
+        "import time\n"
+        "from repro.serve.slots import SlotLoop\n"
+        "T0 = time.perf_counter()  # lint-ok: timer-discipline\n")
+    assert lint_paths([str(f)]) == []
 
 
 def test_syntax_error_is_a_finding(tmp_path):
