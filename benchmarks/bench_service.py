@@ -335,6 +335,251 @@ def bench_obs(load: int = 100, n_slots: int = 32, max_queue: int = 16,
     return table
 
 
+def _lm_config():
+    """The bench LM: a 2-layer MoE transformer with a WIDE expert pool
+    (32 experts, top-4) so the per-step routing matrix has the skewed
+    sparse shape the SELL dispatch exists for.  Dims stay CPU-smoke-sized.
+    """
+    from repro.models.config import ModelConfig, MoEConfig
+
+    return ModelConfig(
+        name="bench-moe-lm", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+        moe=MoEConfig(n_experts=32, top_k=4, capacity_factor=1.25),
+    )
+
+
+def bench_lm_serve(requests: int = 100, n_slots: int = 32,
+                   max_queue: int = 64, prompt_len: int = 128,
+                   batch: int = 4, new_tokens: int = 8) -> dict:
+    """Mixed LM + kernel load through ONE shared service loop — the
+    headline row.
+
+    A fused :class:`~repro.serve.engine.ServeEngine` generates token
+    batches while kernel traffic (SpMV/FFT/PageRank/BFS) is queued on the
+    same :class:`~repro.service.service.KernelService`: every MoE combine
+    the LM executes is submitted as a ``moe_dispatch`` request and
+    coalesces on the shared slot loop with the kernel groups.  Each
+    generation's prompt context comes from the graph-retrieval scenario
+    (PageRank top-ids over the user graph, served by the same loop).
+
+    The SELL-vs-dense dispatch speedup is measured **in-run against a
+    same-process counterfactual** (the PR-5 ``coalescing_speedup``
+    pattern): every routing operand actually served is re-executed through
+    both ``ops.moe_dispatch`` paths on the same machine state, and
+    ``dispatch_speedup`` is total-dense over total-SELL wall time.  The
+    dense path is the materialized-matmul reference — what the masked
+    one-hot einsum combine reduces to.  ``dispatch_mismatch`` counts
+    operands whose two results disagree beyond 1e-8 (zero-base gated in
+    ``bench_compare``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.execspec import ExecSpec
+    from repro.models import model as model_mod
+    from repro.serve.engine import (GenerationConfig, ServeEngine,
+                                    retrieve_context)
+    from repro.service import KernelRegistry, KernelService, TuneCache
+
+    cfg = _lm_config()
+    params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+    gcfg = GenerationConfig(max_new_tokens=new_tokens,
+                            cache_len=prompt_len + new_tokens,
+                            dtype=jnp.float64)
+
+    csr, graph = _build_operands()
+    n_fft = 1024
+    reg = KernelRegistry(cache=TuneCache())
+    reg.register_matrix("mat", csr)
+    reg.register_graph("graph", graph)
+    reg.register_fft("fft", n_fft)
+    m = cfg.moe
+    # envelope: prefill is the widest step (batch * prompt_len token rows)
+    g = min(prompt_len, 2048)
+    cap = int(g * m.top_k / m.n_experts * m.capacity_factor) + 1
+    reg.register_moe("moe", n_tokens=batch * prompt_len,
+                     n_slots=batch * m.n_experts * cap,
+                     d_model=cfg.d_model, top_k=m.top_k)
+
+    svc = KernelService(reg, n_slots=n_slots, max_queue=max_queue)
+    eng = ServeEngine(cfg, params, gcfg, kernel_service=svc,
+                      moe_operand="moe")
+    # record every routing operand the engine actually submits, for the
+    # out-of-band counterfactual below
+    captured = []
+    orig_submit = eng._submit_moe
+
+    def recording_submit(csr_r, x):
+        captured.append((csr_r, x))
+        return orig_submit(csr_r, x)
+
+    eng._submit_moe = recording_submit
+
+    # expected moe submissions per generate: (1 prefill + new_tokens-1
+    # decode steps) x n_layers; retrieval adds one pagerank each
+    n_gen = 3
+    per_gen = new_tokens * cfg.n_layers
+    kernel_load = max(8, requests - n_gen * (per_gen + 1))
+
+    rng = np.random.default_rng(0)
+    warm = KernelService(reg, n_slots=n_slots)
+    _mixed_batch(rng, warm, csr, n_fft, 16, True)
+    warm.drain()
+    eng_warm = ServeEngine(cfg, params, gcfg, kernel_service=warm,
+                           moe_operand="moe")
+    eng_warm.generate(rng.integers(0, cfg.vocab_size,
+                                   (batch, prompt_len)).astype(np.int32))
+    warm.drain()
+
+    t0 = time.perf_counter()
+    rids = _mixed_batch(rng, svc, csr, n_fft, kernel_load, True)
+    tokens = []
+    for i in range(n_gen):
+        ctx = retrieve_context(svc, "graph", prompt_len // 2)
+        prompts = np.concatenate([
+            (ctx[None, :] % cfg.vocab_size).repeat(batch, 0),
+            rng.integers(0, cfg.vocab_size,
+                         (batch, prompt_len - ctx.size))], axis=1,
+        ).astype(np.int32)
+        tokens.append(eng.generate(prompts, seed=i))
+    svc.drain()
+    wall = time.perf_counter() - t0
+    assert all(svc.poll(rid) is not None for rid in rids)
+    offered = svc.stats["submitted"]
+    assert offered >= 100, f"offered load {offered} below the 100 floor"
+    assert len(captured) == n_gen * per_gen
+
+    # -- in-run counterfactual: both dispatch paths on the served operands
+    d = cfg.d_model
+    from repro.sparse.formats import pow2_ceil
+
+    sell_spec = ExecSpec(dispatch="sell", vl=32,
+                         k_block=min(64, pow2_ceil(d)))
+    dense_spec = ExecSpec(dispatch="dense")
+    mismatch = 0
+    sell_us = dense_us = 0.0
+    for csr_r, x in captured:
+        y_sell = np.asarray(ops.moe_dispatch(csr_r, x, spec=sell_spec,
+                                             top_k=m.top_k))
+        y_dense = np.asarray(ops.moe_dispatch(csr_r, x, spec=dense_spec,
+                                              top_k=m.top_k))
+        if np.max(np.abs(y_sell - y_dense)) > 1e-8:
+            mismatch += 1
+        t1 = time.perf_counter()
+        np.asarray(ops.moe_dispatch(csr_r, x, spec=sell_spec, top_k=m.top_k))
+        t2 = time.perf_counter()
+        np.asarray(ops.moe_dispatch(csr_r, x, spec=dense_spec, top_k=m.top_k))
+        t3 = time.perf_counter()
+        sell_us += (t2 - t1) * 1e6
+        dense_us += (t3 - t2) * 1e6
+
+    entry = {
+        "us_per_call": round(wall / offered * 1e6, 1),
+        "throughput_rps": round(offered / wall, 1),
+        "offered": int(offered),
+        "served": svc.stats["served"],
+        "moe_dispatch_launches": svc.stats["moe_dispatch_launches"],
+        "launches": svc.stats["launches"],
+        "coalesced": svc.stats["coalesced"],
+        "generated_tokens": int(sum(t.size for t in tokens)),
+        "dispatch_speedup": round(dense_us / max(sell_us, 1e-9), 2),
+        "dispatch_mismatch": mismatch,
+        "dispatch_sell_us": round(sell_us, 1),
+        "dispatch_dense_us": round(dense_us, 1),
+    }
+    entry.update(svc.latency_percentiles())
+    return {f"service_lm_serve_{requests}": entry}
+
+
+def bench_open_loop(rates=(10, 40, 160), n: int = 100, n_slots: int = 32,
+                    max_queue: int = 32) -> dict:
+    """Open-loop Poisson arrivals: offered rate vs sustained rate.
+
+    Requests arrive on a Poisson clock (``repro.core.traffic
+    .poisson_arrivals``) independent of service progress — the production
+    load model, unlike the closed-loop ladder above where submission waits
+    for the service.  A full admission queue SHEDS the arrival (no retry:
+    an open-loop client does not block).  The throughput knee —
+    ``knee_rps``, the highest offered rate at which >= 90% of arrivals are
+    admitted (the bounded queue absorbs the burst; beyond it the queue
+    saturates and arrivals shed) — is the summary row's headline, with the
+    per-rate ``sustained_rps`` (served / wall) recording the actual
+    completion rate trend alongside.
+    """
+    from repro.core.traffic import poisson_arrivals
+    from repro.service import (KernelRegistry, KernelService, QueueFull,
+                               TuneCache)
+
+    csr, graph = _build_operands()
+    n_fft = 1024
+    reg = KernelRegistry(cache=TuneCache())
+    reg.register_matrix("mat", csr)
+    reg.register_graph("graph", graph)
+    reg.register_fft("fft", n_fft)
+
+    rng = np.random.default_rng(0)
+    warm = KernelService(reg, n_slots=n_slots)
+    _mixed_batch(rng, warm, csr, n_fft, min(n, 32), True)
+    warm.drain()
+
+    def submit_one(svc, rng_l, i) -> bool:
+        """One arrival from the mixed distribution; False = shed."""
+        kind = i % 8
+        try:
+            if kind < 4:
+                svc.submit("spmv", "mat", rng_l.standard_normal(csr.n_cols))
+            elif kind < 6:
+                svc.submit("fft", "fft", rng_l.standard_normal((1, n_fft)))
+            elif kind == 6:
+                svc.submit("pagerank", "graph", iters=2)
+            else:
+                svc.submit("bfs", "graph",
+                           source=int(rng_l.integers(0, 64)))
+        except QueueFull:
+            return False
+        return True
+
+    table = {}
+    knee = 0.0
+    for rate in rates:
+        svc = KernelService(reg, n_slots=n_slots, max_queue=max_queue)
+        arrivals = poisson_arrivals(rate, n, seed=int(rate))
+        rng_l = np.random.default_rng(int(rate))
+        shed = 0
+        t0 = time.perf_counter()
+        for i, t_arr in enumerate(arrivals):
+            # open loop: serve while waiting for the next arrival, but
+            # never delay an arrival that is already due
+            while time.perf_counter() - t0 < t_arr:
+                if svc.queue or any(s is not None for s in svc.slots):
+                    svc.step()
+            if not submit_one(svc, rng_l, i):
+                shed += 1
+        svc.drain()
+        wall = time.perf_counter() - t0
+        served = svc.stats["served"]
+        sustained = served / wall
+        entry = {
+            "us_per_call": round(wall / n * 1e6, 1),
+            "offered_rps": rate,
+            "sustained_rps": round(sustained, 1),
+            "served": served,
+            "shed": shed,
+            "launches": svc.stats["launches"],
+        }
+        entry.update(svc.latency_percentiles())
+        table[f"service_openloop_{rate}"] = entry
+        if shed <= 0.1 * n and rate > knee:
+            knee = rate
+    # knee_rps only: us_per_call would come from whichever rung is the
+    # knee, so a knee shift between ladder rungs would swing a gated time
+    # metric by the rung ratio — the per-rate rows carry the timings.
+    table["service_openloop"] = {"knee_rps": knee}
+    return table
+
+
 def collect(loads=(8, 32, 100), requests: int | None = None,
             cache_path: str = "BENCH_tunecache.json") -> dict:
     if requests:
@@ -342,6 +587,8 @@ def collect(loads=(8, 32, 100), requests: int | None = None,
     table = bench_tune(cache_path)
     table.update(bench_load(loads))
     table.update(bench_obs(load=max(loads)))
+    table.update(bench_open_loop(n=max(loads)))
+    table.update(bench_lm_serve(requests=max(100, max(loads))))
     return table
 
 
@@ -361,6 +608,9 @@ def main(argv=None) -> None:
                     help="TuneCache path used by the cold/warm comparison")
     ap.add_argument("--obs-only", action="store_true",
                     help="run only the observability bench (obs-smoke job)")
+    ap.add_argument("--lm-only", action="store_true",
+                    help="run only the mixed LM + kernel serving bench "
+                         "(lm-serve-smoke job)")
     ap.add_argument("--overhead-gate", type=float, default=None,
                     help="hard-fail when tracing-on exceeds tracing-off "
                          "per-call wall by more than this fraction")
@@ -376,13 +626,16 @@ def main(argv=None) -> None:
                           trace_out=args.trace_out,
                           metrics_out=args.metrics_out,
                           overhead_gate=args.overhead_gate)
+    elif args.lm_only:
+        table = bench_lm_serve(requests=args.requests or 100)
     else:
         table = collect(requests=args.requests, cache_path=args.cache)
     print("# table: serving subsystem (name,us_per_call,derived)")
     for name, entry in table.items():
         extras = ",".join(
             f"{k}={v}" for k, v in entry.items() if k != "us_per_call")
-        print(f"{name},{entry['us_per_call']:.0f},{extras}")
+        us = entry.get("us_per_call")           # summary rows may omit it
+        print(f"{name},{'-' if us is None else format(us, '.0f')},{extras}")
     with open(args.json, "w") as f:
         json.dump(table, f, indent=2, sort_keys=True)
     print(f"# wrote {args.json}")

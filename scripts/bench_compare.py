@@ -46,8 +46,14 @@ TIME_METRICS = ("us_per_call", "p50_us", "p95_us", "p99_us",
 #: the obs rows (BENCH_obs.json): any span left open after the drain, or
 #: any submit attempt that never retired a closed root span, breaks the
 #: trace-completeness invariant and fails the gate from a 0 base.
+#: ``dispatch_mismatch`` is the zero-base counter on the LM-serving row
+#: (BENCH_lm_serve.json / BENCH_service.json): 1 means the SELL MoE
+#: dispatch drifted beyond 1e-8 from the dense counterfactual on a routing
+#: operand actually served during the run — numerical equivalence of the
+#: two dispatch paths is part of the gate, not just the speedup.
 METRICS = TIME_METRICS + ("pad_factor", "rejected", "resident_plan_accepted",
-                          "mismatch", "trace_orphans", "trace_incomplete")
+                          "mismatch", "trace_orphans", "trace_incomplete",
+                          "dispatch_mismatch")
 
 
 def load(path: str) -> dict:

@@ -107,6 +107,25 @@ def render(spans: list[dict], metrics: dict | None) -> tuple[str, int]:
             lines.append(f"  {op:<10} launches={len(g):<6} "
                          f"mean group={sum(g) / len(g):.2f}")
 
+    classes = {name: val for name, val in (metrics or {}).items()
+               if name.startswith("latency_us_class_")
+               and isinstance(val, dict)}
+    if classes:
+        # the mixed-serving split: LM token cadence vs MoE dispatch combines
+        # vs plain kernel traffic, side by side on one slot loop
+        lines.append("")
+        lines.append("== request classes (latency_us_class_*) ==")
+        total = sum(v["count"] for v in classes.values()) or 1
+        for name in sorted(classes):
+            val = classes[name]
+            cls = name[len("latency_us_class_"):]
+            lines.append(
+                f"  {cls:<14} n={val['count']:<7} "
+                f"share={val['count'] / total:>5.1%} "
+                f"p50={_fmt_us(val['p50']):<8} "
+                f"p95={_fmt_us(val['p95']):<8} "
+                f"p99={_fmt_us(val['p99'])}")
+
     if metrics:
         lines.append("")
         lines.append("== metrics ==")

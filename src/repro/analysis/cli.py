@@ -29,6 +29,7 @@ def _self_check_plans(out=sys.stdout) -> int:
         SlabMeta,
         plan_bfs_sell,
         plan_fft_stockham,
+        plan_moe_dispatch,
         plan_pagerank_sell,
         plan_spmm_sell,
         plan_spmm_sell_sharded,
@@ -42,6 +43,24 @@ def _self_check_plans(out=sys.stdout) -> int:
     graph = random_graph(2048, avg_degree=8, seed=0)
     gm = SlabMeta.from_slabs(graph_to_sell_slabs(graph, c=8),
                              check_bounds=True)
+    # a routing-shaped operand for the MoE dispatch entry point: exactly
+    # top_k=2 stored entries per token row (the router weights), the shape
+    # the LM serving path packs every step
+    import numpy as np
+
+    from repro.sparse.formats import CSRMatrix
+
+    rng = np.random.default_rng(1)
+    n_tok, n_slots, top_k = 256, 512, 2
+    routing = CSRMatrix(
+        indptr=np.arange(n_tok + 1, dtype=np.int64) * top_k,
+        indices=np.concatenate([
+            rng.choice(n_slots, top_k, replace=False)
+            for _ in range(n_tok)]).astype(np.int32),
+        data=rng.random(n_tok * top_k),
+        n_cols=n_slots)
+    rm = SlabMeta.from_slabs(csr_to_sell_slabs(routing, c=8),
+                             check_bounds=True)
     plans = [
         plan_spmm_sell(mat, k=1, x_dtype="float64"),
         plan_spmm_sell(mat, k=8, x_dtype="float64"),
@@ -51,6 +70,7 @@ def _self_check_plans(out=sys.stdout) -> int:
         plan_bfs_sell(gm, k=8),
         plan_pagerank_sell(gm, k=8),
         plan_fft_stockham(n=1024, batch=32),
+        plan_moe_dispatch(rm, k=64, x_dtype="float64", top_k=2),
     ]
     bad = 0
     for plan in plans:
@@ -70,12 +90,21 @@ def _self_check_plans(out=sys.stdout) -> int:
         print("EXPECTED-REJECT FAILED: resident plan accepted the "
               f"giant operand {giant.describe()}", file=out)
         bad += 1
+    # the routing contract: a general matrix (rows wider than top_k) must
+    # be refused by the MoE dispatch plan — those weights are not a
+    # token->slot routing and the combine would be silently wrong
+    not_routing = plan_moe_dispatch(mat, k=64, x_dtype="float64", top_k=2)
+    if not_routing.ok:
+        print("EXPECTED-REJECT FAILED: moe_dispatch plan accepted a "
+              f"non-routing operand {mat.describe()}", file=out)
+        bad += 1
     if not accept.ok:
         bad += 1
     else:
         plans.append(accept)
     print(f"launch-plan self-check: {len(plans) - bad}/{len(plans)} ok "
-          "(+ giant-operand resident rejection proved)",
+          "(+ giant-operand resident rejection and non-routing "
+          "moe_dispatch rejection proved)",
           file=out)
     return bad
 

@@ -44,6 +44,7 @@ __all__ = [
     "SlabMeta",
     "plan_bfs_sell",
     "plan_fft_stockham",
+    "plan_moe_dispatch",
     "plan_pagerank_sell",
     "plan_spmm_sell",
     "plan_spmm_sell_sharded",
@@ -207,6 +208,52 @@ def plan_spmm_sell(
         vmem_budget=int(vmem_budget), blocks=tuple(blocks),
         violations=tuple(violations),
     )
+
+
+def plan_moe_dispatch(
+    meta: SlabMeta,
+    k: int = 1,
+    x_dtype: str | None = None,
+    *,
+    top_k: int,
+    w_block: int = 8,
+    k_block: int = 8,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> LaunchPlan:
+    """Plan the MoE expert-dispatch SpMM (:func:`repro.kernels.ops.moe_dispatch`).
+
+    The dispatch operand is the per-step token<->slot routing matrix packed
+    into SELL slabs: one row per token (combine direction) or per expert
+    capacity slot (gather direction), at most ``top_k`` stored entries per
+    row, RHS = the ``(rows, d_model)`` activation stack.  Execution is the
+    plain resident ``spmm_sell`` schedule, so the launch arithmetic is
+    :func:`plan_spmm_sell` verbatim; on top of the shared slab contracts the
+    routing shape itself is enforced:
+
+    * every packed bucket width must stay within ``pow2_ceil(top_k)`` — a
+      wider bucket means a row claims more assignments than the router's
+      top-k can produce (a corrupt pack, or weights folded in twice);
+    * the operand must be a matrix pack (value-carrying slabs), never a
+      graph adjacency.
+    """
+    base = plan_spmm_sell(
+        meta, k=k, x_dtype=x_dtype, w_block=w_block, k_block=k_block,
+        vmem_budget=vmem_budget)
+    violations = list(base.violations)
+    if meta.kind != "matrix":
+        violations.append(
+            f"routing operand kind {meta.kind!r} != 'matrix' (the dispatch "
+            "SpMM needs value-carrying slabs, not an adjacency pack)")
+    if top_k < 1:
+        violations.append(f"top_k must be >= 1, got {top_k}")
+    w_max = pow2_ceil(max(int(top_k), 1))
+    for i, w in enumerate(meta.widths):
+        if w > w_max:
+            violations.append(
+                f"bucket {i} width {w} exceeds pow2_ceil(top_k={top_k})="
+                f"{w_max}: a routing row carries at most top_k entries")
+    return dataclasses.replace(
+        base, kernel="moe_dispatch", violations=tuple(violations))
 
 
 def plan_spmm_sell_sharded(

@@ -308,6 +308,26 @@ def fft_trace(prob: FFTProblem, vcfg: VectorConfig) -> Trace:
     return Trace("fft", vcfg, (first, rest), (("n", n),))
 
 
+# ---------------------------------------------------------------------------
+# Arrival processes — open-loop load generation for the serving benchmarks
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(rate_rps: float, n: int, seed: int = 0):
+    """Arrival offsets (seconds from t=0) of ``n`` requests from a Poisson
+    process at ``rate_rps`` — exponential inter-arrival times, the standard
+    open-loop load model.  Deterministic per seed, monotone non-decreasing.
+    """
+    import numpy as np
+
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+
+
 TRACE_BUILDERS = {
     "spmv": lambda vcfg: spmv_trace(PAPER_PROBLEMS["spmv"], vcfg),
     "bfs": lambda vcfg: bfs_trace(PAPER_PROBLEMS["bfs"], vcfg),

@@ -42,6 +42,13 @@ class ExecSpec:
 
     layout:    graph operand layout, ``"ell"`` or ``"sell"`` (bfs/pagerank).
     mode:      SpMM dispatch, ``"auto"`` | ``"resident"`` | ``"stream"``.
+    dispatch:  MoE expert-dispatch path, ``"auto"`` | ``"sell"`` |
+               ``"dense"`` (:func:`repro.kernels.ops.moe_dispatch` and
+               :func:`repro.models.moe.moe_forward`): ``"sell"`` packs the
+               routing matrix into SELL slabs and runs the batched SpMM
+               core, ``"dense"`` runs the masked one-hot einsum reference,
+               ``"auto"`` picks SELL on concrete arrays and falls back to
+               dense under a tracer (host-side packing cannot trace).
     placement: device placement — ``None`` (single device), an ``int``
                device count (a 1-D mesh over the first N visible devices),
                or a ``Mesh`` / ``MeshContext``.
@@ -58,6 +65,7 @@ class ExecSpec:
 
     layout: str = "ell"
     mode: str = "auto"
+    dispatch: str = "auto"
     placement: Any = None
     vl: int = 256
     sigma: int | None = None
@@ -133,9 +141,9 @@ class ExecSpec:
         equal meshes coalesce.
         """
         return (
-            self.layout, self.mode, self.n_devices(), self.vl, self.sigma,
-            self.w_block, self.k_block, self.col_tile, self.row_tile,
-            self.b_block, self.interpret,
+            self.layout, self.mode, self.dispatch, self.n_devices(), self.vl,
+            self.sigma, self.w_block, self.k_block, self.col_tile,
+            self.row_tile, self.b_block, self.interpret,
         )
 
 

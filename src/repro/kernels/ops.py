@@ -18,6 +18,7 @@ from repro.analysis.preflight import (
     SlabMeta,
     plan_bfs_sell,
     plan_fft_stockham,
+    plan_moe_dispatch,
     plan_pagerank_sell,
     plan_spmm_sell,
     plan_spmm_sell_sharded,
@@ -765,3 +766,77 @@ def pagerank(
         for d, it in zip(dampings, iters_arr)
     ]
     return np.stack(cols, axis=1)
+
+#: ops-level MoE dispatch paths (ExecSpec.dispatch)
+_MOE_DISPATCH_MODES = ("auto", "sell", "dense")
+
+
+def _routing_dense(routing: CSRMatrix) -> np.ndarray:
+    """Materialize the routing matrix densely — the counterfactual the
+    ``dispatch="dense"`` path executes (one XLA matmul over the same
+    operand, exactly what the masked one-hot einsum reduces to)."""
+    dense = np.zeros((routing.n_rows, routing.n_cols), routing.data.dtype)
+    rows = np.repeat(np.arange(routing.n_rows), np.diff(routing.indptr))
+    dense[rows, routing.indices] = routing.data
+    return dense
+
+
+def moe_dispatch(
+    routing: CSRMatrix | SellSlabs,
+    x: np.ndarray | jnp.ndarray,
+    *,
+    spec: ExecSpec | None = None,
+    top_k: int,
+) -> jnp.ndarray:
+    """Y = R @ X for the MoE token<->slot routing matrix R.
+
+    The expert-dispatch step of :func:`repro.models.moe.moe_forward` as a
+    first-class kernel entry point: ``routing`` is the per-step combine
+    matrix (one row per token, at most ``top_k`` stored entries — the
+    renormalized router weights — whose columns are expert capacity slots)
+    and ``x`` the ``(n_slots, d_model)`` expert-output stack.  Returns the
+    ``(n_tokens, d_model)`` combined activations.
+
+    ``spec.dispatch`` selects the path: ``"sell"``/``"auto"`` pack R into
+    width-bucketed SELL slabs at ``spec.vl`` and run the batched multi-RHS
+    :func:`repro.kernels.sell_core.spmm_sell` core (the whole activation
+    stack in one launch set); ``"dense"`` materializes R and runs one dense
+    matmul — the in-process counterfactual the serving bench measures the
+    SELL path against.  Every SELL launch is preflighted with
+    :func:`repro.analysis.preflight.plan_moe_dispatch` (the spmm contracts
+    plus the routing-shape contract: no bucket wider than
+    ``pow2_ceil(top_k)``).
+    """
+    spec = ExecSpec.resolve(spec, _caller="ops.moe_dispatch")
+    if spec.dispatch not in _MOE_DISPATCH_MODES:
+        raise ValueError(
+            f"unknown dispatch {spec.dispatch!r}: expected one of "
+            f"{_MOE_DISPATCH_MODES}")
+    x = jnp.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(
+            f"moe_dispatch expects X of shape (n_slots, d), got {x.shape}")
+    if spec.dispatch == "dense":
+        if not isinstance(routing, CSRMatrix):
+            raise TypeError(
+                "dispatch='dense' materializes the routing matrix and needs "
+                f"CSR input, got {type(routing).__name__}")
+        return jnp.asarray(_routing_dense(routing)) @ x
+    slabs = routing if isinstance(routing, SellSlabs) \
+        else csr_to_sell_slabs(routing, c=spec.vl, sigma=spec.sigma)
+    if not isinstance(slabs, SellSlabs):
+        raise TypeError(
+            f"routing must be a CSRMatrix or SellSlabs, got "
+            f"{type(routing).__name__}")
+    kb = spec.k_block if spec.k_block is not None \
+        else min(8, sell_core.pow2_ceil(x.shape[1]))
+    interp = default_interpret() if spec.interpret is None else spec.interpret
+    meta = SlabMeta.from_slabs(slabs)
+    plan_moe_dispatch(
+        meta, k=int(x.shape[1]), x_dtype=str(x.dtype), top_k=top_k,
+        w_block=spec.w_block, k_block=kb,
+    ).raise_if_invalid()
+    return _spmm_slabs(
+        slabs, x, w_block=spec.w_block, k_block=kb, interpret=interp,
+        mode=spec.mode, col_tile=spec.col_tile, row_tile=spec.row_tile,
+    )

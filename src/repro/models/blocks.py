@@ -15,6 +15,7 @@ Block kinds:
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, NamedTuple
 
 import jax
@@ -47,6 +48,27 @@ SCAN_UNROLL: int = 1
 
 def _unroll(length: int) -> int:
     return min(max(SCAN_UNROLL, 1), length)
+
+
+#: When True, :func:`scan_blocks` runs an eager Python loop over layers
+#: instead of ``jax.lax.scan``.  The loop body then sees CONCRETE arrays,
+#: which is what the MoE SELL dispatch path needs (host-side routing pack —
+#: see :mod:`repro.models.moe`): under ``lax.scan`` every activation is a
+#: tracer and ``dispatch="auto"`` must fall back to dense.  Serving uses
+#: this; training keeps the scan.
+EAGER_BLOCKS: bool = False
+
+
+@contextlib.contextmanager
+def eager_blocks():
+    """Scope in which block stacks run layer-by-layer, eagerly."""
+    global EAGER_BLOCKS
+    prev = EAGER_BLOCKS
+    EAGER_BLOCKS = True
+    try:
+        yield
+    finally:
+        EAGER_BLOCKS = prev
 
 
 # ---------------------------------------------------------------------------
@@ -167,10 +189,25 @@ def scan_blocks(
     kv_stack = caches.kv if caches is not None else None
     ssm_stack = caches.ssm if caches is not None else None
     n_layers = jax.tree_util.tree_leaves(stack)[0].shape[0]
-    (x, aux), (new_kv, new_ssm) = jax.lax.scan(
-        body, (x, jnp.zeros((), jnp.float32)), (stack, kv_stack, ssm_stack),
-        unroll=_unroll(n_layers),
-    )
+    if EAGER_BLOCKS:
+        # Python layer loop: same body, concrete activations (serving-mode
+        # path for the MoE SELL dispatch — see EAGER_BLOCKS above)
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys = []
+        for i in range(n_layers):
+            xs_i = jax.tree_util.tree_map(
+                lambda a, i=i: a[i], (stack, kv_stack, ssm_stack))
+            carry, y_i = body(carry, xs_i)
+            ys.append(y_i)
+        x, aux = carry
+        new_kv, new_ssm = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves), *ys)
+    else:
+        (x, aux), (new_kv, new_ssm) = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (stack, kv_stack, ssm_stack),
+            unroll=_unroll(n_layers),
+        )
     new_caches = (
         LayerCaches(kv=new_kv, ssm=new_ssm) if caches is not None else None
     )

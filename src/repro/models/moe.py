@@ -13,19 +13,93 @@ device count and the expert dimension shards cleanly:
 
 Supports DeepSeekMoE-style *shared experts* (always-on dense path) plus
 normalized top-k routing, capacity factor, and the load-balance aux loss.
+
+Two execution paths share the routing math.  The **dense** path above is
+the training/compile-anywhere reference.  The **SELL** path recognizes that
+expert dispatch is a gather/scatter SpMM in disguise — the combine step is
+``out = C @ eout`` for a (tokens x capacity-slots) matrix ``C`` holding the
+renormalized top-k router weights, at most ``top_k`` stored entries per row
+— and executes it through the repo's batched SELL core
+(:func:`repro.kernels.ops.moe_dispatch`), with the slot-gather done as an
+exact index ``take`` instead of the one-hot dispatch einsum.  The path
+switch rides :attr:`repro.kernels.execspec.ExecSpec.dispatch`
+(``"dense"`` / ``"sell"`` / ``"auto"``): host-side SELL packing cannot run
+under a tracer, so ``"auto"`` silently keeps the dense path inside
+``jit``/``scan`` and ``"sell"`` raises there.  :func:`sell_dispatch` scopes
+the switch (and an optional service-submit hook) without threading a new
+argument through every ``scan_blocks`` body.
 """
 from __future__ import annotations
+
+import contextlib
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.compat import current_mesh_context
+from repro.kernels.execspec import ExecSpec
 from repro.models.config import ModelConfig
 from repro.models.layers import he_init, swiglu
 from repro.models.sharding import DATA, TP, shard
 
 #: tokens per routing group (memory knob for the dispatch one-hots)
 GROUP = 2048
+
+#: legal values of ``ExecSpec.dispatch`` for the MoE combine
+DISPATCH_MODES = ("dense", "sell", "auto")
+
+#: default spec of the SELL dispatch path: C=32 keeps slice padding low for
+#: decode-sized routing groups while staying a multiple of the w_block tile
+SELL_SPEC = ExecSpec(dispatch="auto", vl=32)
+
+#: scoped dispatch override installed by :func:`sell_dispatch` — ``spec``
+#: selects the path, ``submit`` (optional) routes the combine SpMM through a
+#: serving layer (the :class:`repro.service.service.KernelService` hookup)
+_ACTIVE: dict = {"spec": None, "submit": None}
+
+
+@contextlib.contextmanager
+def sell_dispatch(spec: ExecSpec | None = None, submit=None):
+    """Route MoE combines in this scope through the SELL dispatch path.
+
+    ``spec`` defaults to :data:`SELL_SPEC` (``dispatch="auto"``: SELL on
+    concrete activations, dense under a tracer).  ``submit``, when given, is
+    called as ``submit(routing_csr, x_stack)`` with the packed per-step
+    routing (:class:`repro.sparse.formats.CSRMatrix`) and the ``(slots, d)``
+    RHS stack, and must return the ``(tokens, d)`` combine result — the
+    hook :class:`repro.serve.engine.ServeEngine` uses to coalesce MoE
+    launches with kernel traffic on the shared service loop.
+    """
+    prev = dict(_ACTIVE)
+    _ACTIVE["spec"] = spec if spec is not None else SELL_SPEC
+    _ACTIVE["submit"] = submit
+    try:
+        yield
+    finally:
+        _ACTIVE.clear()
+        _ACTIVE.update(prev)
+
+
+def _dispatch_mode(spec: ExecSpec | None, x) -> str:
+    """Resolve the effective path ("dense" | "sell") for activations ``x``."""
+    if spec is None:
+        return "dense"
+    mode = spec.dispatch
+    if mode not in DISPATCH_MODES:
+        raise ValueError(
+            f"unknown dispatch {mode!r}: expected one of {DISPATCH_MODES}")
+    if mode == "dense":
+        return "dense"
+    if isinstance(x, jax.core.Tracer):
+        if mode == "sell":
+            raise ValueError(
+                "dispatch='sell' needs concrete activations: host-side SELL "
+                "packing cannot run under a tracer (jit / lax.scan); use "
+                "dispatch='auto' to fall back to the dense path there")
+        return "dense"           # auto: dense under trace
+    return "sell"
 
 
 def init_moe_params(key, cfg: ModelConfig) -> dict:
@@ -49,9 +123,15 @@ def init_moe_params(key, cfg: ModelConfig) -> dict:
 
 
 def moe_forward(
-    p: dict, cfg: ModelConfig, x: jnp.ndarray
+    p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
+    spec: ExecSpec | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (B, S, d).  Returns (out, aux_loss)."""
+    """x: (B, S, d).  Returns (out, aux_loss).
+
+    ``spec`` selects the dispatch path (see module docstring); when omitted
+    the :func:`sell_dispatch` scope applies, and with neither the dense
+    reference path runs — the status quo for training and scanned decode.
+    """
     m = cfg.moe
     b, s, d = x.shape
     e, k = m.n_experts, m.top_k
@@ -75,13 +155,20 @@ def moe_forward(
     keep = (pos < cap) & (onehot > 0)
     slot = jnp.where(keep, pos, 0).astype(jnp.int32)
 
-    # dispatch/combine one-hots: (b, ng, g, e, cap)
-    slot_oh = jax.nn.one_hot(slot, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
-    dispatch = slot_oh.sum(axis=3)                                    # over k
-    combine = jnp.einsum("bngke,bngkec,bngk->bngec", onehot.astype(x.dtype),
-                         slot_oh, top_w.astype(x.dtype))
+    spec = spec if spec is not None else _ACTIVE["spec"]
+    if _dispatch_mode(spec, x) == "sell":
+        ein, combine_csr = _sell_routing(
+            xg, np.asarray(top_i), np.asarray(top_w, np.float64),
+            np.asarray(keep), np.asarray(slot), cap=cap, e=e)
+    else:
+        combine_csr = None
+        # dispatch/combine one-hots: (b, ng, g, e, cap)
+        slot_oh = jax.nn.one_hot(slot, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+        dispatch = slot_oh.sum(axis=3)                                # over k
+        combine = jnp.einsum("bngke,bngkec,bngk->bngec", onehot.astype(x.dtype),
+                             slot_oh, top_w.astype(x.dtype))
+        ein = jnp.einsum("bngec,bngd->bnecd", dispatch, xg)           # (b,ng,e,cap,d)
 
-    ein = jnp.einsum("bngec,bngd->bnecd", dispatch, xg)               # (b,ng,e,cap,d)
     ep_ok = _ep_ok(e)
     ein = shard(ein, DATA, None, TP if ep_ok else None, None, None)
     h_gate = jnp.einsum("bnecd,edf->bnecf", ein, p["experts_gate"].astype(x.dtype))
@@ -89,7 +176,12 @@ def moe_forward(
     h = jax.nn.silu(h_gate) * h_up
     h = shard(h, DATA, None, TP if ep_ok else None, None, None if ep_ok else TP)
     eout = jnp.einsum("bnecf,efd->bnecd", h, p["experts_down"].astype(x.dtype))
-    out = jnp.einsum("bngec,bnecd->bngd", combine, eout)
+
+    if combine_csr is not None:
+        out = _sell_combine(combine_csr, eout, spec, top_k=k)
+        out = out.reshape(b, ng, g, d)
+    else:
+        out = jnp.einsum("bngec,bnecd->bngd", combine, eout)
 
     if m.n_shared:
         out = out + swiglu(
@@ -99,13 +191,73 @@ def moe_forward(
             p["shared"]["w_down"].astype(x.dtype),
         )
 
-    # load-balance aux: E * sum_e(frac_tokens_e * mean_prob_e)
-    frac = dispatch.sum(axis=(2, 4)) / (g * k)                        # (b,ng,e)
+    # load-balance aux: E * sum_e(frac_tokens_e * mean_prob_e).  The kept-
+    # assignment count per (b, ng, e) equals the dense path's
+    # dispatch.sum(axis=(2, 4)) — both count kept (token, k) assignments.
+    frac = keep.sum(axis=(2, 3)).astype(x.dtype) / (g * k)            # (b,ng,e)
     mean_p = probs.mean(axis=2)                                       # (b,ng,e)
     aux = e * jnp.mean(jnp.sum(frac.astype(jnp.float32) * mean_p, axis=-1))
 
     out = shard(out.reshape(b, s, d), DATA, None, None)
     return out, aux
+
+
+def _sell_routing(xg, top_i, top_w, keep, slot, *, cap: int, e: int):
+    """Host-side routing pack: exact slot gather + combine CSR.
+
+    Returns ``(ein, combine_csr)`` where ``ein`` is the ``(b, ng, e, cap, d)``
+    slot activations — each capacity slot holds its token's row of ``xg``
+    verbatim (an index gather, bit-identical to the 0/1 dispatch einsum) —
+    and ``combine_csr`` is the (tokens x slots) routing matrix with the
+    renormalized router weights as values, ready for the SELL SpMM combine.
+    """
+    from repro.sparse.formats import CSRMatrix
+
+    b, ng, g, d = xg.shape
+    n_tok = b * ng * g
+    n_slots = b * ng * e * cap
+    bi, ni, gi, ki, ei = np.nonzero(keep)
+    sv = slot[bi, ni, gi, ki, ei]
+    tok = (bi * ng + ni) * g + gi
+    slot_flat = ((bi * ng + ni) * e + ei) * cap + sv
+    w = top_w[bi, ni, gi, ki]
+
+    # gather direction: slot -> token index (each slot filled at most once)
+    slot_tok = np.full(n_slots, -1, np.int64)
+    slot_tok[slot_flat] = tok
+    xg_flat = xg.reshape(n_tok, d)
+    mask = jnp.asarray(slot_tok >= 0)
+    gathered = jnp.take(xg_flat, jnp.asarray(np.maximum(slot_tok, 0)), axis=0)
+    ein = jnp.where(mask[:, None], gathered, 0).reshape(b, ng, e, cap, d)
+
+    # combine direction: token rows, slot columns, top-k weights as values
+    order = np.argsort(tok, kind="stable")
+    counts = np.bincount(tok, minlength=n_tok)
+    indptr = np.concatenate(([0], np.cumsum(counts))).astype(np.int64)
+    csr = CSRMatrix(
+        indptr=indptr,
+        indices=slot_flat[order].astype(np.int32),
+        data=w[order].astype(_np_dtype(xg.dtype)),
+        n_cols=n_slots,
+    )
+    return ein, csr
+
+
+def _np_dtype(jdtype) -> np.dtype:
+    return np.dtype(str(jdtype))
+
+
+def _sell_combine(csr, eout, spec: ExecSpec, *, top_k: int) -> jnp.ndarray:
+    """Run the combine SpMM ``out = C @ eout`` on the SELL core — directly
+    through :func:`repro.kernels.ops.moe_dispatch`, or through the scoped
+    ``submit`` hook when a serving layer owns the launch."""
+    x = eout.reshape(-1, eout.shape[-1])
+    submit = _ACTIVE["submit"]
+    if submit is not None:
+        return jnp.asarray(submit(csr, np.asarray(x)))
+    from repro.kernels import ops
+
+    return ops.moe_dispatch(csr, x, spec=spec, top_k=top_k)
 
 
 def _ep_ok(n_experts: int) -> bool:

@@ -3,6 +3,17 @@
 Decode is one jitted step reused across iterations (cache shapes are static),
 so serving cost is 1 compile + N cheap steps — the production shape of the
 ``decode_32k`` / ``long_500k`` dry-run cells.
+
+**Fused kernel-service mode.**  Constructed with a
+:class:`repro.service.service.KernelService` and a registered MoE dispatch
+envelope, the engine reroutes every MoE combine through the service's slot
+loop: blocks run eagerly (:func:`repro.models.blocks.eager_blocks` — the
+SELL routing pack needs concrete activations), each per-step routing matrix
+is submitted as a ``moe_dispatch`` request, and the service coalesces those
+launches with whatever SpMV/BFS/PageRank/FFT traffic shares the loop.  The
+per-token wall time lands in the service metrics registry as the
+``latency_us_class_lm_token`` histogram, next to the service's own
+``moe_dispatch`` / ``kernel`` request classes.
 """
 from __future__ import annotations
 
@@ -16,8 +27,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import use_mesh
+from repro.models import blocks as blk_mod
 from repro.models import model as M
+from repro.models import moe as moe_mod
 from repro.models.config import ModelConfig
+from repro.obs import Stopwatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,17 +57,68 @@ def sample_token(logits: jnp.ndarray, key, gcfg: GenerationConfig) -> jnp.ndarra
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, gcfg: GenerationConfig,
-                 mesh=None):
+                 mesh=None, kernel_service=None, moe_operand: str | None = None,
+                 dispatch_spec=None):
         """``mesh`` (Mesh / MeshContext, optional) is inherited by every
         prefill and decode trace — the serving layer's explicit handle on
-        the launch mesh instead of a process-global lookup."""
+        the launch mesh instead of a process-global lookup.
+
+        ``kernel_service`` + ``moe_operand`` (a name registered via
+        :meth:`repro.service.registry.KernelRegistry.register_moe`) switch
+        the engine into fused mode: MoE combines ride the service's slot
+        loop as ``moe_dispatch`` requests instead of launching inline.
+        ``dispatch_spec`` (an :class:`~repro.kernels.execspec.ExecSpec`)
+        attaches to those submissions — requests only coalesce when their
+        specs agree.
+        """
         self.cfg = cfg
         self.params = params
         self.gcfg = gcfg
         self.mesh = mesh
+        self.kernel_service = kernel_service
+        self.moe_operand = moe_operand
+        self.dispatch_spec = dispatch_spec
+        if kernel_service is not None and moe_operand is None:
+            raise ValueError(
+                "fused mode needs moe_operand: the registered dispatch "
+                "envelope the MoE submissions execute against")
         self._decode = jax.jit(
             functools.partial(M.decode_step, cfg=cfg, dtype=gcfg.dtype, mesh=mesh)
         )
+        # fused mode cannot jit: the SELL routing pack runs host-side per
+        # step, so the decode body must see concrete activations
+        self._decode_eager = functools.partial(
+            M.decode_step, cfg=cfg, dtype=gcfg.dtype, mesh=mesh)
+
+    @property
+    def fused(self) -> bool:
+        return self.kernel_service is not None
+
+    # -- fused-mode plumbing ------------------------------------------------
+    def _submit_moe(self, csr, x: np.ndarray) -> np.ndarray:
+        """The :func:`repro.models.moe.sell_dispatch` submit hook: one
+        per-step routing matrix in, the combined activations out.  Submits
+        to the shared service and steps the loop until the result lands —
+        each step is a coalescing round where this request can share a
+        launch with queued kernel traffic."""
+        from repro.service.service import QueueFull, SubmitRequest
+
+        svc = self.kernel_service
+        req = SubmitRequest(
+            op="moe_dispatch", operand=self.moe_operand,
+            payload={"indptr": csr.indptr, "indices": csr.indices,
+                     "data": csr.data, "x": x},
+            spec=self.dispatch_spec)
+        while True:
+            try:
+                rid = svc.submit(req)
+                break
+            except QueueFull:
+                svc.step()              # drain one round, then retry
+        while (y := svc.poll(rid)) is None:
+            svc.step()
+        svc.release(rid)
+        return y
 
     def generate(
         self,
@@ -62,27 +127,72 @@ class ServeEngine:
         seed: int = 0,
     ) -> np.ndarray:
         """Greedy/sampled continuation for a (B, S) prompt batch."""
+        if self.fused:
+            # eager blocks + scoped SELL dispatch: every MoE combine in this
+            # generation rides the kernel service's slot loop
+            with blk_mod.eager_blocks(), moe_mod.sell_dispatch(
+                    spec=self.dispatch_spec, submit=self._submit_moe):
+                return self._generate(prompts, extras, seed,
+                                      decode=self._decode_eager)
+        return self._generate(prompts, extras, seed, decode=self._decode)
+
+    def _generate(self, prompts: np.ndarray, extras: dict | None, seed: int,
+                  *, decode) -> np.ndarray:
         cfg, gcfg = self.cfg, self.gcfg
         b, s = prompts.shape
+        tok_hist = None
+        if self.fused:
+            tok_hist = self.kernel_service.metrics.histogram(
+                "latency_us_class_lm_token",
+                "wall time per generated token (LM serving class)")
         with use_mesh(self.mesh):
             caches = M.init_caches(cfg, b, max_len=gcfg.cache_len, dtype=gcfg.dtype)
         batch = {"tokens": jnp.asarray(prompts)}
         if extras:
             batch.update(extras)
+        sw = Stopwatch().start()
         logits, caches = M.prefill(self.params, cfg, batch, caches,
                                    dtype=gcfg.dtype, mesh=self.mesh)
         key = jax.random.PRNGKey(seed)
         out = []
         tok = sample_token(logits[:, -1], key, gcfg)
+        if tok_hist is not None:
+            tok_hist.observe(sw.stop().elapsed_us)
         out.append(tok)
         done = tok == gcfg.eos_id
         for i in range(1, gcfg.max_new_tokens):
             key, sub = jax.random.split(key)
-            logits, caches = self._decode(self.params, tokens=tok[:, None], caches=caches)
+            sw = Stopwatch().start()
+            logits, caches = decode(self.params, tokens=tok[:, None], caches=caches)
             tok = sample_token(logits, sub, gcfg)
+            if tok_hist is not None:
+                tok_hist.observe(sw.stop().elapsed_us)
             tok = jnp.where(done, gcfg.eos_id, tok)
             out.append(tok)
             done = done | (tok == gcfg.eos_id)
             if gcfg.eos_id >= 0 and bool(done.all()):
                 break
         return np.asarray(jnp.stack(out, axis=1))
+
+
+def retrieve_context(service, operand: str, n_ctx: int, *,
+                     damping: float = 0.85, iters: int = 8) -> np.ndarray:
+    """Graph-retrieval scenario: PageRank over a registered user graph,
+    returning the ``n_ctx`` highest-ranked node ids — the per-request
+    context a caller prepends to its ``generate`` prompts.  The PageRank
+    request rides the same service loop as the MoE and kernel traffic, so
+    retrieval coalesces with everything else in flight."""
+    from repro.service.service import QueueFull, SubmitRequest
+
+    req = SubmitRequest(op="pagerank", operand=operand,
+                        params={"damping": damping, "iters": iters})
+    while True:
+        try:
+            rid = service.submit(req)
+            break
+        except QueueFull:
+            service.step()
+    while (rank := service.poll(rid)) is None:
+        service.step()
+    service.release(rid)
+    return np.argsort(np.asarray(rank))[::-1][:n_ctx].copy()

@@ -19,6 +19,7 @@ from repro.analysis.preflight import (
     SlabMeta,
     plan_bfs_sell,
     plan_fft_stockham,
+    plan_moe_dispatch,
     plan_pagerank_sell,
     plan_spmm_sell,
     plan_spmm_sell_sharded,
@@ -29,7 +30,7 @@ from repro.core.sdv import MachineParams, tpu_v5e_machine
 from repro.obs import MetricsRegistry, Stopwatch
 from repro.graphs.gen import EllpackGraph, graph_to_sell_slabs
 from repro.service.tunecache import OperandSignature, TuneCache, operand_signature
-from repro.sparse.formats import CSRMatrix, SellSlabs, to_csr
+from repro.sparse.formats import CSRMatrix, SellSlabs, pow2_ceil, to_csr
 
 
 @dataclasses.dataclass
@@ -64,6 +65,11 @@ class RegisteredOperand:
     #: the device-partitioned layout (ShardedSlabs / ShardedGraphSlabs)
     #: when the registry carries a multi-device mesh, else None
     sharded: Any = None
+    #: MoE dispatch envelope (kind == "moe"): the per-step routing operands
+    #: an LM engine submits are transient, so what registers is the SHAPE
+    #: CONTRACT — ``{"c", "top_k", "d_model", "dtype"}`` — that every
+    #: submitted routing matrix is preflighted against
+    moe: dict | None = None
 
     @property
     def pad_factor(self) -> float:
@@ -300,6 +306,42 @@ class KernelRegistry:
         op.plans = {
             "fft": plan_fft_stockham(n, batch=8).raise_if_invalid()}
         op.device_arrays = {"wre": jnp.asarray(wre), "wim": jnp.asarray(wim)}
+        return self._admit(op, sw)
+
+    def register_moe(self, name: str, *, n_tokens: int, n_slots: int,
+                     d_model: int, top_k: int, c: int = 32,
+                     dtype: str = "float64") -> RegisteredOperand:
+        """Admit an LM engine's MoE dispatch traffic class.
+
+        Unlike matrices and graphs, the operand itself is transient — the
+        token→slot routing matrix changes every decode step — so what
+        registers is the *envelope*: up to ``n_tokens`` routing rows of at
+        most ``top_k`` stored entries against an ``(n_slots, d_model)``
+        expert-output stack, packed at slice height ``c``.  The envelope's
+        worst-case :class:`SlabMeta` is preflighted with
+        :func:`plan_moe_dispatch` at registration (and re-derived live at
+        every submit, like the other kinds), so an engine whose dispatch
+        shape cannot launch is refused before any token is decoded.
+        """
+        sw = Stopwatch().start()
+        if top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {top_k}")
+        w = pow2_ceil(max(int(top_k), 1))
+        meta = SlabMeta(
+            kind="matrix", c=int(c), widths=(w,),
+            n_slices=(-(-int(n_tokens) // int(c)),),
+            n_rows=int(n_tokens), n_cols=int(n_slots),
+            val_dtype=dtype, idx_dtype="int32",
+        )
+        op = RegisteredOperand(name=name, kind="moe", signature=None,
+                               n=int(n_tokens), n_cols=int(n_slots))
+        op.slab_meta = meta
+        op.moe = {"c": int(c), "top_k": int(top_k),
+                  "d_model": int(d_model), "dtype": dtype}
+        kb = min(64, pow2_ceil(int(d_model)))
+        op.plans = {"moe_dispatch": plan_moe_dispatch(
+            meta, k=int(d_model), x_dtype=dtype, top_k=int(top_k),
+            k_block=kb).raise_if_invalid()}
         return self._admit(op, sw)
 
 

@@ -56,6 +56,7 @@ from repro.obs import (
 from repro.analysis.preflight import (
     plan_bfs_sell,
     plan_fft_stockham,
+    plan_moe_dispatch,
     plan_pagerank_sell,
     plan_spmm_sell,
     plan_spmm_sell_sharded,
@@ -66,7 +67,14 @@ from repro.service.registry import KernelRegistry, RegisteredOperand
 from repro.serve.slots import SlotLoop
 from repro.sparse.formats import pow2_ceil
 
-OPS = ("spmv", "bfs", "pagerank", "fft")
+OPS = ("spmv", "bfs", "pagerank", "fft", "moe_dispatch")
+
+#: request class of each op for the per-class latency histograms:
+#: ``moe_dispatch`` is LM dispatch traffic, everything else is plain kernel
+#: traffic (the LM engine's own per-token class, ``lm_token``, is observed
+#: by :class:`repro.serve.engine.ServeEngine` into the same registry)
+OP_CLASS = {op: ("moe_dispatch" if op == "moe_dispatch" else "kernel")
+            for op in OPS}
 
 #: FROZEN contract: the exact key set of ``KernelService.stats``.  These
 #: names are observability API — dashboards and the bench gate
@@ -89,7 +97,20 @@ STATS_KEYS = (
     "preflight_rejected",   # submits refused by a LaunchPlan violation
     "streamed_launches",    # launches on the out-of-VMEM streaming path
     "sharded_launches",     # launches on the multi-device sharded path
+    "moe_dispatch_launches",  # batched MoE combine launches (LM serving)
 )
+
+
+def _moe_k_block(d_model: int) -> int:
+    """RHS tile of the MoE combine SpMM.  Unlike SpMV traffic (few stacked
+    vectors), the combine's RHS is the full d_model-wide activation stack,
+    so the tile tracks the model width: wider k tiles mean fewer grid
+    cells, which is where the SELL path's win over the dense counterfactual
+    comes from.  Capped at 64 lanes; the launch plan still preflights the
+    resulting VMEM footprint."""
+    from repro.kernels.sell_core import pow2_ceil as _p2
+
+    return min(64, _p2(max(1, d_model)))
 
 
 class QueueFull(RuntimeError):
@@ -377,6 +398,11 @@ class KernelService(SlotLoop[KernelRequest]):
             plans["pagerank"] = plan_pagerank_sell(record.slab_meta, k=k)
         elif record.kind == "fft":
             plans["fft"] = plan_fft_stockham(record.n, batch=8)
+        elif record.kind == "moe" and record.slab_meta is not None:
+            m = record.moe
+            plans["moe_dispatch"] = plan_moe_dispatch(
+                record.slab_meta, k=m["d_model"], x_dtype=m["dtype"],
+                top_k=m["top_k"], k_block=_moe_k_block(m["d_model"]))
         return plans
 
     def _preflight(self, op: str, record: RegisteredOperand) -> None:
@@ -441,6 +467,11 @@ class KernelService(SlotLoop[KernelRequest]):
             self.metrics.histogram(
                 f"latency_us_{req.op}",
                 f"submit->result latency of {req.op} requests").observe(lat_us)
+            cls = OP_CLASS.get(req.op, "kernel")
+            self.metrics.histogram(
+                f"latency_us_class_{cls}",
+                f"submit->result latency of the {cls} request "
+                "class").observe(lat_us)
         status = "ok" if ok else "error"
         self._t_end(req.queued_span)   # idempotent: usually closed at admit
         self._t_end(req.exec_span, status=status)
@@ -719,3 +750,86 @@ class KernelService(SlotLoop[KernelRequest]):
         self._count_launch(operand, op="fft", wall_us=sw.elapsed_us)
         for req, (lo, hi) in zip(good, spans):
             req.result = (re[lo:hi], im[lo:hi])
+
+    def _run_moe_dispatch(self, operand, reqs):
+        """The whole group is ONE batched combine SpMM: each request's
+        per-step routing matrix becomes a block of a block-diagonal
+        operand, the expert-output stacks concatenate as its RHS rows, and
+        one SELL launch produces every request's combined activations.
+        This is the fusion point where ServeEngine's MoE traffic coalesces
+        with kernel traffic on the shared slot loop."""
+        from repro.kernels import ops
+        from repro.sparse.formats import CSRMatrix
+
+        if operand.kind != "moe":
+            raise TypeError(f"operand {operand.name!r} is not a moe envelope")
+        m = operand.moe
+        d, top_k = m["d_model"], m["top_k"]
+
+        def check(req):
+            p = req.payload
+            if not isinstance(p, dict):
+                raise TypeError("moe_dispatch payload must be a dict with "
+                                "indptr/indices/data/x")
+            indptr = np.asarray(p["indptr"], np.int64)
+            indices = np.asarray(p["indices"], np.int32)
+            data = np.asarray(p["data"], np.dtype(m["dtype"]))
+            x = np.asarray(p["x"], np.dtype(m["dtype"]))
+            if x.ndim != 2 or x.shape[1] != d:
+                raise ValueError(
+                    f"x must have shape (n_slots, {d}), got {x.shape}")
+            n_tok = indptr.shape[0] - 1
+            if n_tok < 1 or n_tok > operand.n:
+                raise ValueError(
+                    f"routing rows {n_tok} outside the registered envelope "
+                    f"(0, {operand.n}]")
+            widths = np.diff(indptr)
+            if widths.min(initial=0) < 0 or len(indices) != indptr[-1] \
+                    or len(data) != indptr[-1]:
+                raise ValueError("malformed routing CSR")
+            if widths.max(initial=0) > top_k:
+                raise ValueError(
+                    f"routing row carries {int(widths.max())} entries, "
+                    f"envelope top_k is {top_k}")
+            if indices.size and (indices.min() < 0
+                                 or indices.max() >= x.shape[0]):
+                raise ValueError("routing column index out of range")
+            return (indptr, indices, data, x)
+
+        good, payloads = self._validated(reqs, check)
+        if not good:
+            return
+        # block-diagonal stack: request i's tokens occupy rows
+        # [row_off_i, row_off_i + n_tok_i), its slots the matching column
+        # band — one operand, one launch, per-request row spans
+        indptrs, indices_all, data_all, xs, spans = [np.zeros(1, np.int64)], \
+            [], [], [], []
+        row_off = col_off = nnz_off = 0
+        for indptr, indices, data, x in payloads:
+            spans.append((row_off, row_off + indptr.shape[0] - 1))
+            indptrs.append(indptr[1:] + nnz_off)
+            indices_all.append(indices + col_off)
+            data_all.append(data)
+            xs.append(x)
+            row_off += indptr.shape[0] - 1
+            col_off += x.shape[0]
+            nnz_off += int(indptr[-1])
+        csr = CSRMatrix(
+            indptr=np.concatenate(indptrs),
+            indices=np.concatenate(indices_all).astype(np.int32)
+            if indices_all else np.zeros(0, np.int32),
+            data=np.concatenate(data_all)
+            if data_all else np.zeros(0, np.dtype(m["dtype"])),
+            n_cols=col_off,
+        )
+        x_stack = np.vstack(xs)
+        spec = ExecSpec(dispatch="sell", vl=m["c"],
+                        k_block=_moe_k_block(d),
+                        interpret=self.interpret)
+        sw = Stopwatch().start()
+        y = np.asarray(ops.moe_dispatch(csr, x_stack, spec=spec, top_k=top_k))
+        sw.stop()
+        self.stats["moe_dispatch_launches"] += 1
+        self._count_launch(operand, op="moe_dispatch", wall_us=sw.elapsed_us)
+        for req, (lo, hi) in zip(good, spans):
+            req.result = y[lo:hi]
